@@ -1,0 +1,43 @@
+"""Paper SSIV communication-complexity claim: per-round and total
+uplink/downlink vs FedAvg/FedRand/FedPow.
+
+Model: each billed client-round moves 2*|params| (down: global model,
+up: update). FedFiTS bills all clients on FFA rounds and only the team on
+slot rounds; round-based baselines bill their per-round selection."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+
+
+def run(budget="small"):
+    K = 16
+    rounds = 10 if budget == "small" else 30
+    model, fed, ev = common.make_setup("images", n_clients=K, n=2400)
+    params = model.init(jax.random.PRNGKey(0))
+    p_bytes = sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
+    out = []
+    for algo, kw in [("fedavg", {}), ("fedrand", {"fedrand_c": 0.5}),
+                     ("fedpow", {"fedpow_m": 8}), ("fedfits", {})]:
+        r = common.run_fl(model, fed, ev, algo=algo, rounds=rounds,
+                          n_clients=K, **kw)
+        r.pop("state")
+        cr = r["cost_client_rounds"]
+        r.update({
+            "param_bytes": p_bytes,
+            "total_comm_mb": round(2 * cr * p_bytes / 1e6, 1),
+            "comm_per_round_mb": round(2 * cr * p_bytes / rounds / 1e6, 2),
+        })
+        out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        common.csv_row(f"comm/{r['algo']}", r["wall_s"],
+                       f"total_mb={r['total_comm_mb']};best_acc={r['best_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

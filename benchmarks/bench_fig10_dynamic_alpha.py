@@ -1,0 +1,51 @@
+"""Paper Figs. 10/11 + Table VI: fixed alpha=0.5 vs dynamic alpha, and the
+client participation-ratio fairness proxy."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(budget="small"):
+    K = 8
+    rounds = 10 if budget == "small" else 25
+    out = []
+    for kind, tag in [("images", "mnist"), ("images", "mnist-m")]:
+        # mnist-m analogue: same generator family, different seed/style
+        model, fed, ev = common.make_setup(kind, n_clients=K, n=2400,
+                                           seed=0 if tag == "mnist" else 42)
+        for dyn in [False, True]:
+            r = common.run_fl(model, fed, ev, algo="fedfits", rounds=rounds,
+                              n_clients=K, alpha=0.5, dynamic_alpha=dyn)
+            r.pop("state")
+            r.update({"dataset": tag,
+                      "alpha_mode": "dynamic" if dyn else "fixed0.5",
+                      "figure": "10/11"})
+            out.append(r)
+    # Table VI participation ratios
+    model, fed, ev = common.make_setup("images", n_clients=12, n=2400)
+    for algo, kw in [("fedavg", {}), ("fedpow", {"fedpow_m": 6}),
+                     ("fedfits", {"alpha": 0.5, "beta": 0.5,
+                                  "dynamic_alpha": False}),
+                     ("fedfits", {"alpha": 0.5, "beta": 0.1,
+                                  "dynamic_alpha": False}),
+                     ("fedfits", {"dynamic_alpha": True})]:
+        r = common.run_fl(model, fed, ev, algo=algo, rounds=rounds,
+                          n_clients=12, avail_prob=0.7, **kw)
+        r.pop("state")
+        r.update({"table": "VI", "config": f"{algo}/{kw}"})
+        out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        if r.get("table") == "VI":
+            common.csv_row(f"table6/{r['config']}", r["wall_s"],
+                           f"participation={r['participation_pct']:.0f}%")
+        else:
+            common.csv_row(f"fig10/{r['dataset']}/{r['alpha_mode']}",
+                           r["wall_s"], f"best_acc={r['best_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 7: tabular Crop-Recommendation cross-domain evaluation —
+FedFiTS vs FedAvg/FedRand/FedPow, gap widening with client count."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(budget="small"):
+    ks = [8, 16] if budget == "small" else [8, 16, 32]
+    rounds = 12 if budget == "small" else 25
+    out = []
+    for K in ks:
+        model, fed, ev = common.make_setup("tabular", n_clients=K,
+                                           n=150 * K, n_classes=22, sep=1.2)
+        for algo in ["fedavg", "fedrand", "fedpow", "fedfits"]:
+            r = common.run_fl(model, fed, ev, algo=algo, rounds=rounds,
+                              n_clients=K)
+            r.pop("state")
+            r.update({"K": K, "figure": "7"})
+            out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        name = f"fig7/{r['algo']}/K{r['K']}"
+        common.csv_row(name, r["wall_s"],
+                       f"best_acc={r['best_acc']:.3f};tt90={r['rounds_to_90pct_best']}")
+
+
+if __name__ == "__main__":
+    main()

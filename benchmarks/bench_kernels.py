@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: wall time per call (CPU interpret / XLA-ref
+execution — TPU numbers come from the dry-run roofline) + analytic kernel
+roofline (FLOPs, bytes, arithmetic intensity per VMEM tile)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs.base import HBM_BW, PEAK_FLOPS_BF16
+from repro.kernels.flash_attention_ops import flash_attention
+from repro.kernels.robust_agg_ops import robust_aggregate_tree
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)[0].block_until_ready() if isinstance(fn(*args, **kw),
+                                                         tuple) else \
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.time() - t0) / reps
+
+
+def flash_roofline(B, S, Hq, dh, window, blk=128):
+    """Analytic per-chip roofline for the flash kernel."""
+    kv_touched = min(window or S, S)
+    flops = 4.0 * B * Hq * S * kv_touched * dh         # qk^T + pv
+    byts = 2.0 * B * S * Hq * dh * 2 + 2.0 * B * kv_touched * Hq * dh * 2
+    return {
+        "flops": flops, "bytes": byts,
+        "intensity": flops / byts,
+        "t_compute_us": 1e6 * flops / PEAK_FLOPS_BF16,
+        "t_memory_us": 1e6 * byts / HBM_BW,
+        "vmem_tile_kb": (3 * blk * dh * 2 + blk * dh * 4) / 1024,
+    }
+
+
+def run(budget="small"):
+    out = []
+    B, S, Hq, Hkv, dh = 1, 256, 4, 2, 128
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, Hq, dh), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hkv, dh), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hkv, dh), jnp.bfloat16)
+    for window in [0, 128]:
+        t = _time(lambda: flash_attention(q, k, v, window=window,
+                                          interpret=True))
+        r = {"name": f"flash_attention/S{S}/w{window}", "wall_s": t}
+        r.update(flash_roofline(B, S, Hq, dh, window))
+        out.append(r)
+    # long-context projection (the long_500k serving tile)
+    out.append({"name": "flash_attention/S524288/w8192(analytic)",
+                "wall_s": 0.0,
+                **flash_roofline(1, 524288, 64, 128, 8192)})
+
+    C = 16
+    tree = {"w": jax.random.normal(key, (C, 1 << 14))}
+    mask = jnp.ones((C,))
+    for mode in ["trimmed", "median"]:
+        t = _time(lambda: robust_aggregate_tree(tree, mask, mode=mode,
+                                                interpret=True))
+        n = tree["w"].size
+        out.append({"name": f"robust_agg/{mode}/C{C}/N{n}", "wall_s": t,
+                    "flops": 3.0 * C * C * n / C,
+                    "bytes": 4.0 * n * (C + 1) / C})
+    return out
+
+
+def main():
+    for r in run():
+        extra = f"intensity={r.get('intensity', 0):.1f}" \
+            if "intensity" in r else ""
+        common.csv_row(r["name"], r["wall_s"], extra)
+
+
+if __name__ == "__main__":
+    main()

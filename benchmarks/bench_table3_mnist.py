@@ -1,0 +1,33 @@
+"""Paper Table III: FedFiTS vs FedAvg on MNIST-like data, normal & attack
+modes, varying client counts (scaled to the container budget)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(budget="small"):
+    ks = [10] if budget == "small" else [10, 20, 50]
+    rounds = 15 if budget == "small" else 25
+    out = []
+    for K in ks:
+        model, fed, ev = common.make_setup("images", n_clients=K,
+                                           n=200 * K, sep=0.9)
+        for attack in [False, True]:
+            for algo in ["fedavg", "fedfits"]:
+                r = common.run_fl(model, fed, ev, algo=algo, rounds=rounds,
+                                  n_clients=K, attack=attack)
+                r.pop("state")
+                r.update({"K": K, "table": "III"})
+                out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        name = f"table3/{r['algo']}/K{r['K']}/{'attack' if r['attack'] else 'normal'}"
+        common.csv_row(name, r["wall_s"],
+                       f"best_acc={r['best_acc']:.3f};cost={r['cost_client_rounds']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table V: FedRand vs FedPow vs FedFiTS on X-ray-like imaging
+(2-class pneumonia analogue), normal & attack modes."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(budget="small"):
+    K = 10
+    rounds = 15 if budget == "small" else 25
+    model, fed, ev = common.make_setup("images", n_clients=K, n=2000,
+                                       n_classes=2, sep=0.6)
+    out = []
+    for attack in [False, True]:
+        for algo in ["fedrand", "fedpow", "fedfits"]:
+            r = common.run_fl(model, fed, ev, algo=algo, rounds=rounds,
+                              n_clients=K, attack=attack,
+                              fedrand_c=0.7, fedpow_d=K, fedpow_m=6)
+            r.pop("state")
+            r.update({"K": K, "table": "V"})
+            out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        name = f"table5/{r['algo']}/{'attack' if r['attack'] else 'normal'}"
+        common.csv_row(name, r["wall_s"],
+                       f"best_acc={r['best_acc']:.3f};cost={r['cost_client_rounds']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

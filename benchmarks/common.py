@@ -1,0 +1,72 @@
+"""Shared harness for the paper-table benchmarks (SimEngine runs on
+synthetic stand-ins for MNIST / X-ray / Crop — the container is offline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import attacks, fedfits
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+
+def make_setup(kind="images", n_clients=10, n=2000, seed=0, n_classes=10,
+               arch=None, sep=None):
+    arch = arch or ("paper-cnn" if kind == "images" else "paper-mlp")
+    model = build(ARCHS[arch])
+    fed, test = build_federation(
+        seed, kind=kind, n=n, n_clients=n_clients, batch_size=32,
+        n_classes=n_classes, sep=sep,
+        n_features=22 if kind == "tabular" else 22)
+
+    @jax.jit
+    def eval_fn(params):
+        l, m = model.loss(params, test)
+        return {"test_loss": l, "test_acc": m["acc"]}
+
+    return model, fed, eval_fn
+
+
+def run_fl(model, fed, eval_fn, *, algo="fedfits", rounds=15, n_clients=10,
+           attack=False, n_malicious=0, seed=1, **fed_kw):
+    malicious = None
+    data_attack = None
+    if attack:
+        n_mal = n_malicious or max(int(0.3 * n_clients), 1)  # paper-style 30%
+        malicious = jnp.zeros((n_clients,)).at[jnp.arange(n_mal)].set(1.0)
+        n_classes = model.cfg.vocab_size
+
+        def data_attack(data, mal, rng):
+            return {"y": attacks.label_flip(data["y"], n_classes, mal)}
+
+    cfg = FedConfig(n_clients=n_clients, algorithm=algo, local_epochs=2,
+                    local_lr=0.2, **fed_kw)
+    t0 = time.time()
+    state, hist = fedfits.run(model, cfg, fed.data_fn, rounds,
+                              jax.random.PRNGKey(seed), eval_fn=eval_fn,
+                              data_attack=data_attack, malicious=malicious)
+    wall = time.time() - t0
+    accs = [float(h["test_acc"]) for h in hist]
+    return {
+        "algo": algo, "attack": attack, "rounds": rounds,
+        "final_acc": accs[-1], "best_acc": max(accs),
+        "acc_curve": accs,
+        "rounds_to_90pct_best": next(
+            (i + 1 for i, a in enumerate(accs) if a >= 0.9 * max(accs)),
+            rounds),
+        "cost_client_rounds": float(state.cost_client_rounds),
+        "participation_pct": 100.0 * float(
+            (state.cum_selected > 0).mean()),
+        "wall_s": round(wall, 2),
+        "state": state,
+    }
+
+
+def csv_row(name, wall_s, derived):
+    us = 1e6 * wall_s
+    print(f"{name},{us:.0f},{derived}", flush=True)

@@ -1,0 +1,40 @@
+"""Render the roofline table from dry-run jsonl output.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_row(r):
+    dom = r["dominant"].replace("_s", "")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {dom} "
+            f"| {r['useful_ratio']:.2f} |")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    rows = load(path)
+    print("| arch | shape | mesh | compute s | memory s | collective s "
+          "| bound | MODEL/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    seen = set()
+    for r in rows:
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Healthcare scenario (paper SSVI-C): hospitals hold non-IID chest-X-ray-
+like data; three of ten are unreliable (label-flipping). Compares FedAvg,
+FedRand, FedPow and FedFiTS on accuracy, robustness, cost and fairness.
+
+  PYTHONPATH=src python examples/fl_healthcare_sim.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import attacks, fedfits
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+K, ROUNDS, N_MAL = 10, 15, 3
+
+model = build(ARCHS["paper-cnn"].replace(vocab_size=2))  # pneumonia: 2-class
+federation, server_test = build_federation(
+    seed=0, kind="images", n=2400, n_clients=K, batch_size=32, n_classes=2,
+    dirichlet_alpha=0.3, sep=0.6)   # hard mode: baselines cannot saturate
+
+malicious = jnp.zeros((K,)).at[jnp.arange(N_MAL)].set(1.0)
+
+
+def data_attack(data, mal, rng):
+    return {"y": attacks.label_flip(data["y"], 2, mal)}
+
+
+@jax.jit
+def evaluate(params):
+    loss, m = model.loss(params, server_test)
+    return {"test_acc": m["acc"]}
+
+
+print(f"{K} hospitals, {N_MAL} compromised (label flipping)\n")
+results = {}
+for algo in ["fedavg", "fedrand", "fedpow", "fedfits"]:
+    cfg = FedConfig(n_clients=K, algorithm=algo, local_epochs=2,
+                    local_lr=0.15, msl=4, pft=2, beta=0.1,
+                    fedrand_c=0.7, fedpow_m=6)
+    state, hist = fedfits.run(model, cfg, federation.data_fn, ROUNDS,
+                              jax.random.PRNGKey(1), eval_fn=evaluate,
+                              data_attack=data_attack, malicious=malicious)
+    accs = [float(h["test_acc"]) for h in hist]
+    mal_sel = float(state.cum_selected[:N_MAL].sum())
+    hon_sel = float(state.cum_selected[N_MAL:].sum())
+    results[algo] = dict(best=max(accs), final=accs[-1],
+                         cost=float(state.cost_client_rounds),
+                         mal_sel=mal_sel, hon_sel=hon_sel)
+    print(f"{algo:8s} best_acc={max(accs):.3f} final={accs[-1]:.3f} "
+          f"cost={results[algo]['cost']:.0f} client-rounds "
+          f"(compromised selected {mal_sel:.0f}x vs honest {hon_sel:.0f}x)")
+
+top = max(r["best"] for r in results.values())
+leaders = [a for a, r in results.items() if r["best"] >= top - 1e-6]
+fit = results["fedfits"]
+print(f"\nbest under attack: {'/'.join(leaders)} "
+      f"(paper Table V finding: FedFiTS leads under poisoning; on ties, "
+      f"its margin is the exclusion of compromised clients below)")
+print(f"FedFiTS selected compromised hospitals "
+      f"{fit['mal_sel'] / max(fit['mal_sel'] + fit['hon_sel'], 1):.0%} "
+      f"of the time — the trust/fitness gate at work")

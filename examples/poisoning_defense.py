@@ -1,0 +1,58 @@
+"""Model-poisoning defense A/B: sign-flip byzantine clients vs the
+aggregator zoo (FedAvg mean, coordinate median, trimmed mean, Krum) and
+the Pallas robust-aggregation kernel on the same updates.
+
+  PYTHONPATH=src python examples/poisoning_defense.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import attacks, fedfits
+from repro.data.pipeline import build_federation
+from repro.kernels.robust_agg_ops import robust_aggregate_tree
+from repro.models.model import build
+
+K, ROUNDS, N_MAL = 10, 12, 2
+
+model = build(ARCHS["paper-mlp"])
+federation, server_test = build_federation(
+    seed=0, kind="tabular", n=1600, n_clients=K, batch_size=32, n_classes=22)
+malicious = jnp.zeros((K,)).at[jnp.arange(N_MAL)].set(1.0)
+
+
+def update_attack(upd, mal, rng):
+    return attacks.sign_flip(upd, mal, scale=10.0)
+
+
+@jax.jit
+def evaluate(params):
+    loss, m = model.loss(params, server_test)
+    return {"test_acc": m["acc"]}
+
+
+print(f"{N_MAL}/{K} byzantine clients (10x sign-flipped updates)\n")
+for agg in ["fedavg", "median", "trimmed_mean", "krum"]:
+    cfg = FedConfig(n_clients=K, algorithm="fedfits", aggregator=agg,
+                    local_epochs=2, local_lr=0.05,
+                    cosine_outlier_thresh=-0.5)
+    state, hist = fedfits.run(model, cfg, federation.data_fn, ROUNDS,
+                              jax.random.PRNGKey(2), eval_fn=evaluate,
+                              update_attack=update_attack,
+                              malicious=malicious)
+    accs = [float(h["test_acc"]) for h in hist]
+    print(f"aggregator={agg:12s} best_acc={max(accs):.3f} "
+          f"final={accs[-1]:.3f}")
+
+# ---- the Pallas kernel on one poisoned round of updates ----------------
+key = jax.random.PRNGKey(3)
+honest = {"w": jax.random.normal(key, (K, 512)) * 0.01 + 1.0}
+poisoned = attacks.sign_flip(honest, malicious, scale=10.0)
+for mode in ["trimmed", "median"]:
+    out = robust_aggregate_tree(poisoned, jnp.ones((K,)), mode=mode)
+    print(f"pallas robust_agg[{mode}] mean coordinate "
+          f"= {float(np.mean(np.asarray(out['w']))):.3f} "
+          f"(honest value 1.0; naive mean "
+          f"{float(np.mean(np.asarray(poisoned['w']))):.3f})")

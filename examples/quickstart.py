@@ -1,0 +1,49 @@
+"""Quickstart: FedFiTS in ~40 lines.
+
+Trains the paper's MLP on synthetic non-IID tabular data with fitness-
+selected, slotted client scheduling, and prints the per-round team.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import fedfits
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+K = 8
+model = build(ARCHS["paper-mlp"])
+federation, server_test = build_federation(
+    seed=0, kind="tabular", n=1600, n_clients=K, batch_size=32,
+    n_classes=22, dirichlet_alpha=0.3)
+
+
+@jax.jit
+def evaluate(params):
+    loss, m = model.loss(params, server_test)
+    return {"test_loss": loss, "test_acc": m["acc"]}
+
+
+fed_cfg = FedConfig(
+    n_clients=K,
+    algorithm="fedfits",
+    alpha=0.5, dynamic_alpha=True,      # Eq. 2 / SSV
+    beta=0.1,                           # Eq. 3 threshold openness
+    msl=4, pft=2,                       # slotted scheduling (Eqs. 4-5)
+    local_epochs=2, local_lr=0.05,
+)
+
+state, history = fedfits.run(
+    model, fed_cfg, federation.data_fn, n_rounds=15,
+    rng=jax.random.PRNGKey(0), eval_fn=evaluate)
+
+for h in history:
+    team = "".join("#" if x else "." for x in h["team"])
+    print(f"round {h['round']:>2}  team[{team}]  "
+          f"alpha={float(h['alpha']):.2f}  "
+          f"test_acc={float(h['test_acc']):.3f}")
+print(f"\nfinal test accuracy: {float(history[-1]['test_acc']):.3f}")
+print(f"billed client-rounds: {float(state.cost_client_rounds):.0f} "
+      f"(FedAvg would bill {15 * K})")

@@ -1,0 +1,49 @@
+"""Serving example: batched requests against a federated-trained decoder —
+prefill + autoregressive decode with KV cache, plus the sliding-window
+ring-cache (long-context) mode of the long_500k shape at laptop scale.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models.model import build
+
+cfg = ARCHS["tiny-lm"].replace(n_layers=4, d_model=256, n_heads=4,
+                               n_kv_heads=2, d_ff=512, vocab_size=2048,
+                               head_dim=64)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, P, G = 4, 64, 24
+requests = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                              cfg.vocab_size)
+
+for ring, label in [(False, "full KV cache (decode_32k path)"),
+                    (True, "ring cache, window=32 (long_500k path)")]:
+    c = cfg.replace(sliding_window=32) if ring else cfg
+    m = build(c)
+    cache = m.init_cache(B, P + G, ring=ring, dtype=jnp.float32)
+    prefill = jax.jit(m.prefill)
+    decode = jax.jit(m.decode)
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": requests}, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    outs = [tok]
+    for i in range(G - 1):
+        logits, cache = decode(params, {"tokens": tok}, cache,
+                               jnp.int32(P + i))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    kv_rows = jax.tree_util.tree_leaves(cache)[0].shape
+    print(f"{label}\n  batch={B} prompt={P} generated={G} "
+          f"wall={dt:.2f}s ({B * G / dt:.1f} tok/s)"
+          f"\n  cache leaf shape: {kv_rows}"
+          f"\n  first request continuation: {gen[0, :10].tolist()}\n")

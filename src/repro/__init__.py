@@ -1,0 +1,5 @@
+"""repro: FedFiTS — fitness-selected, slotted client scheduling for
+trustworthy federated learning, as a production-grade multi-pod JAX
+framework. See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

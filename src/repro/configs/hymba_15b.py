@@ -1,0 +1,17 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads [arXiv:2411.13676]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    sliding_window=1024,      # hymba uses SWA on most layers
+    source="arXiv:2411.13676 (Hymba)",
+)

@@ -1,0 +1,5 @@
+"""FedFiTS core: the paper's contribution as composable JAX modules."""
+from repro.core import (aggregation, attacks, fitness, pod, selection,
+                        slots)
+from repro.core.fedfits import FedState, init_state, make_round, run
+from repro.core.pod import PodState, init_pod_state, make_train_step

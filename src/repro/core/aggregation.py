@@ -1,0 +1,172 @@
+"""Robust, trust-aware aggregation A(.) of per-client updates (paper Eq. 11).
+
+Updates are pytrees whose leaves carry a leading client axis (K, ...).
+Every aggregator takes a float mask (K,) — only masked-in clients count —
+and weights (K,) already normalised by the caller.
+
+  fedavg        weighted mean (memory-light; the big-arch default)
+  median        coordinate-wise masked median
+  trimmed_mean  coordinate-wise masked trimmed mean
+  krum          (multi-)Krum by pairwise distances
+
+plus the trust machinery: EWMA trust decay and gradient-cosine outlier
+gating, and the two-stage slot-internal -> cross-slot combine.
+The Pallas kernel in kernels/robust_agg.py implements the same masked
+trimmed-mean/median contract for the TPU hot path; ref parity is tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = 1e30
+
+
+def normalize_weights(weights, mask):
+    w = weights * mask
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
+def weighted_mean(updates, weights, mask):
+    w = normalize_weights(weights, mask)
+
+    def agg(leaf):
+        return jnp.tensordot(w.astype(leaf.dtype), leaf, axes=(0, 0))
+
+    return jax.tree_util.tree_map(agg, updates)
+
+
+def _masked_sorted(leaf, mask):
+    """Sort clients per coordinate with masked-out clients pushed to +inf."""
+    k = leaf.shape[0]
+    m = mask.reshape((k,) + (1,) * (leaf.ndim - 1))
+    return jnp.sort(jnp.where(m > 0, leaf.astype(jnp.float32), _BIG), axis=0)
+
+def median(updates, mask):
+    """Coordinate-wise median over masked-in clients."""
+    n = mask.sum()
+
+    def agg(leaf):
+        s = _masked_sorted(leaf, mask)
+        k = leaf.shape[0]
+        # indices of the middle element(s) among the first n sorted entries
+        lo = jnp.floor((n - 1) / 2).astype(jnp.int32)
+        hi = jnp.ceil((n - 1) / 2).astype(jnp.int32)
+        take = lambda i: jnp.take_along_axis(
+            s, jnp.broadcast_to(i, (1,) + leaf.shape[1:]).astype(jnp.int32), 0)[0]
+        return (0.5 * (take(lo) + take(hi))).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(agg, updates)
+
+
+def trimmed_mean(updates, mask, trim_frac):
+    """Coordinate-wise mean after dropping trim_frac per side (of n selected)."""
+    n = mask.sum()
+    t = jnp.floor(trim_frac * n).astype(jnp.int32)
+
+    def agg(leaf):
+        s = _masked_sorted(leaf, mask)
+        k = leaf.shape[0]
+        idx = jnp.arange(k).reshape((k,) + (1,) * (leaf.ndim - 1))
+        keep = (idx >= t) & (idx < (n - t).astype(jnp.int32))
+        cnt = jnp.maximum(n - 2 * t, 1.0)
+        return (jnp.where(keep, s, 0.0).sum(0) / cnt).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(agg, updates)
+
+
+def pairwise_sq_dists(updates, mask):
+    """(K, K) squared distances between flattened client updates."""
+    def leaf_d(leaf):
+        f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        sq = jnp.sum(f * f, axis=1)
+        return sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)
+
+    d = sum(jax.tree_util.tree_leaves(jax.tree_util.tree_map(leaf_d, updates)))
+    big = _BIG * (1 - mask[:, None] * mask[None, :])
+    return jnp.maximum(d, 0.0) + big
+
+
+def krum(updates, mask, f, *, multi_m=1):
+    """(Multi-)Krum [Blanchard et al. 2017]. Scores each client by the sum of
+    its n - f - 2 smallest distances to other selected clients; averages the
+    multi_m best."""
+    d = pairwise_sq_dists(updates, mask)
+    k = d.shape[0]
+    d = d + _BIG * jnp.eye(k)                     # exclude self
+    n = mask.sum()
+    closest = jnp.sort(d, axis=1)
+    j = jnp.arange(k, dtype=jnp.float32)[None, :]
+    take = jnp.maximum(n - f - 2, 1.0)
+    scores = jnp.where(j < take, closest, 0.0).sum(1)
+    scores = jnp.where(mask > 0, scores, _BIG)
+    order = jnp.argsort(scores)
+    sel = jnp.zeros((k,), jnp.float32).at[order[:multi_m]].set(1.0)
+    return weighted_mean(updates, sel, sel)
+
+
+def cosine_outlier_mask(updates, ref, mask, thresh):
+    """Gate clients whose update has cosine similarity < thresh vs. a
+    reference direction (e.g. the trust-weighted mean). Returns 0/1 (K,)."""
+    def dot_leaf(leaf, rleaf):
+        f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        r = rleaf.reshape(-1).astype(jnp.float32)
+        return f @ r, jnp.sum(f * f, axis=1), jnp.sum(r * r)
+
+    dots, n1, n2 = 0.0, 0.0, 0.0
+    for leaf, rleaf in zip(jax.tree_util.tree_leaves(updates),
+                           jax.tree_util.tree_leaves(ref)):
+        d, a, b = dot_leaf(leaf, rleaf)
+        dots, n1, n2 = dots + d, n1 + a, n2 + b
+    cos = dots / jnp.maximum(jnp.sqrt(n1 * n2), 1e-12)
+    return ((cos >= thresh) & (mask > 0)).astype(jnp.float32)
+
+
+def update_trust(trust, scores, mask, decay):
+    """EWMA trust: selected clients' trust tracks their normalised score;
+    unselected clients keep (decayed-toward-neutral) trust."""
+    smax = jnp.maximum(jnp.max(scores * mask), 1e-12)
+    norm_score = jnp.clip(scores / smax, 0.0, 1.0)
+    upd = decay * trust + (1.0 - decay) * norm_score
+    hold = decay * trust + (1.0 - decay) * 0.5     # drift to neutral
+    return jnp.where(mask > 0, upd, hold)
+
+
+def aggregate(updates, weights, mask, cfg):
+    """Dispatch on cfg.aggregator; applies the gradient-cosine outlier gate
+    first (robust pipeline of DESIGN.md §1 item 5).
+
+    The gate's reference direction is the coordinate MEDIAN, not the mean:
+    a mean reference is itself corruptible (large-magnitude poison flips
+    the reference's sign and the gate would then excise the honest
+    clients)."""
+    ref = median(updates, mask)
+    gate = cosine_outlier_mask(updates, ref, mask, cfg.cosine_outlier_thresh)
+    m = mask * gate
+    # never gate everyone out
+    m = jnp.where(m.sum() > 0, m, mask)
+    if cfg.aggregator == "fedavg":
+        return weighted_mean(updates, weights, m)
+    if cfg.aggregator == "median":
+        return median(updates, m)
+    if cfg.aggregator == "trimmed_mean":
+        return trimmed_mean(updates, m, cfg.trim_frac)
+    if cfg.aggregator == "krum":
+        return krum(updates, m, cfg.krum_f)
+    raise ValueError(cfg.aggregator)
+
+
+def two_stage(slot_updates, slot_weights, slot_masks, cfg):
+    """Slot-internal robust aggregation per cohort, then cross-slot mean —
+    the paper's two-stage scheme; on the pod this is psum(data) then
+    psum(pod). Here: cohort-major pytrees (n_cohorts leading axis)."""
+    per_cohort = [
+        aggregate(jax.tree_util.tree_map(lambda l: l[i], slot_updates),
+                  slot_weights[i], slot_masks[i], cfg)
+        for i in range(slot_weights.shape[0])
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_cohort)
+    cw = jnp.asarray([m.sum() for m in slot_masks], jnp.float32)
+    cw = cw / jnp.maximum(cw.sum(), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.tensordot(cw.astype(l.dtype), l, axes=(0, 0)), stacked)

@@ -1,0 +1,72 @@
+"""Poisoning attack models (paper §VI: data & model poisoning) for the
+robustness experiments. Data attacks corrupt the client's batch; model
+attacks corrupt the client's *update* before it reaches the server.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- data ----
+def label_flip(labels, n_classes, malicious, *, mode="shift"):
+    """Flip labels of malicious clients. labels: (K, B); malicious: (K,) 0/1.
+
+    mode 'shift': y -> (y+1) % C (paper's label-flipping attack);
+    mode 'target': everything -> class 0 (targeted).
+    """
+    if mode == "shift":
+        flipped = jnp.mod(labels + 1, n_classes)
+    else:
+        flipped = jnp.zeros_like(labels)
+    m = malicious.reshape((-1,) + (1,) * (labels.ndim - 1))
+    return jnp.where(m > 0, flipped, labels)
+
+
+def backdoor_trigger(images, labels, malicious, *, target=0, patch=3):
+    """Stamp a white patch in the corner + relabel to target (backdoor)."""
+    trig = images.at[..., :patch, :patch, :].set(1.0)
+    m_im = malicious.reshape((-1,) + (1,) * (images.ndim - 1))
+    m_lb = malicious.reshape((-1,) + (1,) * (labels.ndim - 1))
+    return (jnp.where(m_im > 0, trig, images),
+            jnp.where(m_lb > 0, jnp.full_like(labels, target), labels))
+
+
+def feature_noise(x, malicious, sigma, rng):
+    """Gaussian feature corruption (tabular/image)."""
+    noise = sigma * jax.random.normal(rng, x.shape, x.dtype)
+    m = malicious.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(m > 0, x + noise, x)
+
+
+# --------------------------------------------------------------- model ----
+def sign_flip(updates, malicious, *, scale=1.0):
+    """Byzantine sign-flip: u -> -scale * u for malicious clients."""
+    def leaf(l):
+        m = malicious.reshape((-1,) + (1,) * (l.ndim - 1)).astype(l.dtype)
+        return l * (1.0 - m) + (-scale) * l * m
+
+    return jax.tree_util.tree_map(leaf, updates)
+
+
+def gaussian_update(updates, malicious, sigma, rng):
+    """Replace malicious updates with pure noise."""
+    leaves = jax.tree_util.tree_leaves(updates)
+    keys = jax.random.split(rng, len(leaves))
+    flat, treedef = jax.tree_util.tree_flatten(updates)
+
+    out = []
+    for l, k in zip(flat, keys):
+        m = malicious.reshape((-1,) + (1,) * (l.ndim - 1)).astype(l.dtype)
+        noise = sigma * jax.random.normal(k, l.shape, l.dtype)
+        out.append(l * (1.0 - m) + noise * m)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def scale_attack(updates, malicious, gamma):
+    """Model-replacement scaling: u -> gamma * u (boosted poisoning)."""
+    def leaf(l):
+        m = malicious.reshape((-1,) + (1,) * (l.ndim - 1)).astype(l.dtype)
+        return l * (1.0 + (gamma - 1.0) * m)
+
+    return jax.tree_util.tree_map(leaf, updates)

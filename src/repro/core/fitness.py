@@ -1,0 +1,79 @@
+"""FedFiTS fitness metrics (paper §III-A, §V) — pure jnp, fully jittable.
+
+  theta_k     Eq. (1): Quality-of-Learning angle between the (loss, acc)
+              midpoint of global/local models and the loss unit vector.
+  score_k     Eq. (2): alpha * q_k + (1 - alpha) * theta_k.
+  threshold   Eq. (3): mean(score) * (1 - beta).
+  dynamic alpha  Eqs. (18)-(19): alpha_k = 1[q_k > theta_k]; alpha = mean_k.
+              (The paper prints "sum"; the stated property alpha > 0.5 iff
+               #(q_k > theta_k) > #(q_k < theta_k) requires the mean —
+               see DESIGN.md §7.)
+
+All functions take a client-availability mask so unavailable clients never
+contribute to means/thresholds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def theta(gl, ga, ll, la, *, paper_exact=False):
+    """Eq. (1). All args (K,) float32: global/local loss & accuracy.
+
+    Geometric intent (paper Fig. 1a): theta_k is the angle between the
+    loss axis and the midpoint M((GL+LL)/2, (GA+LA)/2) of the global/local
+    performance points, i.e.
+
+        theta_k = arccos((GL+LL) / sqrt((GL+LL)^2 + (GA+LA)^2)).
+
+    The equation as *printed* groups the terms per-point,
+    sqrt((GL+GA)^2 + (LL+LA)^2), which exceeds the arccos domain whenever
+    losses dominate (theta degenerates to 0 for any high-loss regime, e.g.
+    LM training) — a typo by the geometric construction. We default to the
+    geometry; ``paper_exact=True`` reproduces the literal formula
+    (clipped), for A/B. See DESIGN.md §7.
+    """
+    num = gl + ll
+    if paper_exact:
+        den = jnp.sqrt(jnp.square(gl + ga) + jnp.square(ll + la))
+    else:
+        den = jnp.sqrt(jnp.square(gl + ll) + jnp.square(ga + la))
+    arg = jnp.clip(num / jnp.maximum(den, _EPS), -1.0, 1.0)
+    return jnp.arccos(arg)
+
+
+def data_quality(n_k, mask=None):
+    """q_k = n_k / n over available clients."""
+    n_k = n_k.astype(jnp.float32)
+    if mask is not None:
+        n_k = n_k * mask
+    return n_k / jnp.maximum(n_k.sum(), _EPS)
+
+
+def score(q, th, alpha):
+    """Eq. (2)."""
+    return alpha * q + (1.0 - alpha) * th
+
+
+def threshold(scores, beta, mask=None):
+    """Eq. (3): mean of available clients' scores * (1 - beta)."""
+    if mask is None:
+        mask = jnp.ones_like(scores)
+    mean = (scores * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return mean * (1.0 - beta)
+
+
+def dynamic_alpha(q, th, mask=None):
+    """Eqs. (18)-(19): alpha = mean_k 1[q_k > theta_k] over available clients."""
+    if mask is None:
+        mask = jnp.ones_like(q)
+    ind = (q > th).astype(jnp.float32) * mask
+    return ind.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def team_theta(th, team_mask):
+    """theta(t) = sum_{k in S_t} theta_k (Algorithm 1)."""
+    return (th * team_mask).sum()

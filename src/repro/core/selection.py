@@ -1,0 +1,77 @@
+"""Client-selection policies: FedFiTS threshold election (+ fairness floors,
+explore-exploit), and the paper's baselines FedAvg / FedRand / FedPow.
+
+All policies return a float32 mask (K,) — X(k, t) of Eq. (8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fitness
+
+
+def fedfits_select(scores, beta, avail, rng, *, floor_prob=0.0,
+                   explore_eps=0.0, min_team=1):
+    """Threshold-aware election (Eqs. 3, 7-8) with fairness extensions.
+
+    floor_prob: A4 participation floor — every available client is force-
+      included with prob >= floor_prob regardless of score (prevents
+      starvation; bounds eps_sel in the convergence analysis).
+    explore_eps: explore-exploit — below-threshold clients are admitted
+      with prob explore_eps (utility drift re-discovery).
+    min_team: keep at least this many clients (top-score fallback).
+    """
+    thr = fitness.threshold(scores, beta, avail)
+    base = (scores >= thr).astype(jnp.float32) * avail
+
+    r1, r2 = jax.random.split(rng)
+    floor = (jax.random.uniform(r1, scores.shape) < floor_prob).astype(jnp.float32)
+    explore = (jax.random.uniform(r2, scores.shape) < explore_eps).astype(jnp.float32)
+    mask = jnp.clip(base + (floor + explore) * avail, 0.0, 1.0)
+
+    # fallback: if the team came out empty, take the best available client(s)
+    k = scores.shape[0]
+    order = jnp.argsort(jnp.where(avail > 0, -scores, jnp.inf))
+    top = jnp.zeros((k,)).at[order[:min_team]].set(1.0) * avail
+    return jnp.where(mask.sum() >= min_team, mask, jnp.clip(mask + top, 0, 1))
+
+
+def fedavg_select(avail):
+    """FedAvg (c=1.0): everyone available."""
+    return avail
+
+
+def fedrand_select(avail, c, rng):
+    """FedRand: uniform random m = ceil(c*K_avail) clients."""
+    k = avail.shape[0]
+    m = jnp.maximum(jnp.ceil(c * avail.sum()), 1.0)
+    u = jax.random.uniform(rng, (k,))
+    pri = jnp.where(avail > 0, u, -jnp.inf)
+    order = jnp.argsort(-pri)
+    ranks = jnp.zeros((k,), jnp.float32).at[order].set(
+        jnp.arange(k, dtype=jnp.float32))
+    return ((ranks < m) & (avail > 0)).astype(jnp.float32)
+
+
+def fedpow_select(local_losses, avail, d, m, rng):
+    """Power-of-choice [Cho et al. 2020]: sample a candidate set of size d
+    (proportional to availability), then pick the m with highest local loss."""
+    k = avail.shape[0]
+    u = jax.random.uniform(rng, (k,))
+    cand_pri = jnp.where(avail > 0, u, -jnp.inf)
+    cand_order = jnp.argsort(-cand_pri)
+    cand_rank = jnp.zeros((k,), jnp.float32).at[cand_order].set(
+        jnp.arange(k, dtype=jnp.float32))
+    cand = (cand_rank < d) & (avail > 0)
+
+    loss_pri = jnp.where(cand, local_losses, -jnp.inf)
+    sel_order = jnp.argsort(-loss_pri)
+    sel_rank = jnp.zeros((k,), jnp.float32).at[sel_order].set(
+        jnp.arange(k, dtype=jnp.float32))
+    return ((sel_rank < m) & cand).astype(jnp.float32)
+
+
+def participation_ratio(cum_selected):
+    """Fraction of clients selected at least once (paper Table VI proxy)."""
+    return (cum_selected > 0).mean()

@@ -1,0 +1,59 @@
+"""Slotted team scheduling (paper §III, Eqs. (4)-(5)) — branchless/jittable.
+
+  p(t+1) = p(t)+1 if theta(t) < theta(t-1) else 0          (Eq. 4)
+  h(t+1) = p(t+1) >= PFT  or  (t+1) % MSL == 0  or  t == 1 (Eq. 5 + Alg. 1)
+
+plus the *adaptive slot* extension (paper Table II "adaptive team slots"):
+MSL is scaled by the observed team-performance variance — stable teams get
+longer slots, volatile ones get reassessed sooner.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotState(NamedTuple):
+    p: jnp.ndarray            # consecutive-decline counter, i32
+    prev_theta: jnp.ndarray   # theta(t-1), f32
+    theta_ema: jnp.ndarray    # EMA of team theta (adaptive slots), f32
+    theta_var: jnp.ndarray    # EMA of squared deviation, f32
+
+
+def init_slot_state():
+    return SlotState(p=jnp.int32(0), prev_theta=jnp.float32(-jnp.inf),
+                     theta_ema=jnp.float32(0.0), theta_var=jnp.float32(0.0))
+
+
+def update(state: SlotState, theta_t, t, msl, pft, *, adaptive=False,
+           ema_decay=0.9):
+    """Returns (new_state, h_next: bool array) for round t (1-indexed).
+
+    Matches Algorithm 1: the decline counter only starts once two team
+    evaluations exist (t > 2), and h is forced True at t=1 so round 2 is
+    still free-for-all.
+    """
+    declined = theta_t < state.prev_theta
+    p_next = jnp.where((t > 2) & declined, state.p + 1, jnp.int32(0))
+
+    first = jnp.isinf(state.prev_theta)     # EMA warmup: seed on first obs
+    ema_prev = jnp.where(first, theta_t, state.theta_ema)
+    ema = ema_decay * ema_prev + (1 - ema_decay) * theta_t
+    var = jnp.where(
+        first, jnp.float32(0.0),
+        ema_decay * state.theta_var + (1 - ema_decay)
+        * jnp.square(theta_t - ema))
+
+    if adaptive:
+        # variance-scaled slot length: rel. std 0 -> 2*MSL, large -> MSL/2
+        rel = jnp.sqrt(var) / jnp.maximum(jnp.abs(ema), 1e-6)
+        msl_eff = jnp.clip(jnp.round(msl * (2.0 - 3.0 * jnp.minimum(rel, 0.5))),
+                           jnp.maximum(msl // 2, 1), 2 * msl).astype(jnp.int32)
+    else:
+        msl_eff = jnp.int32(msl)
+
+    h_next = (p_next >= pft) | (jnp.mod(t + 1, msl_eff) == 0) | (t == 1)
+    return SlotState(p=p_next, prev_theta=theta_t, theta_ema=ema,
+                     theta_var=var), h_next

@@ -1,0 +1,57 @@
+"""Synthetic dataset generators (the container is offline, so class-
+conditional generators stand in for MNIST / X-ray / Crop / LM corpora —
+same shapes, controllable difficulty and heterogeneity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_tabular(key, n, n_features=22, n_classes=22, sep=2.0):
+    """Crop-Recommendation-like: Gaussian blobs in feature space."""
+    kc, km, kx = jax.random.split(key, 3)
+    centers = sep * jax.random.normal(km, (n_classes, n_features))
+    y = jax.random.randint(kc, (n,), 0, n_classes)
+    x = centers[y] + jax.random.normal(kx, (n, n_features))
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def make_images(key, n, size=28, n_classes=10, sep=1.5):
+    """MNIST/X-ray-like: per-class low-rank template + pixel noise,
+    values in [0, 1], shape (n, size, size, 1)."""
+    kt, kc, kx = jax.random.split(key, 3)
+    rank = 4
+    u = jax.random.normal(kt, (n_classes, size, rank))
+    v = jax.random.normal(jax.random.fold_in(kt, 1), (n_classes, rank, size))
+    templates = jnp.einsum("csr,crt->cst", u, v) / jnp.sqrt(rank)
+    y = jax.random.randint(kc, (n,), 0, n_classes)
+    x = sep * templates[y] + jax.random.normal(kx, (n, size, size))
+    x = jax.nn.sigmoid(x)[..., None]
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def make_lm_tokens(key, n_seqs, seq_len, vocab, n_latent=32):
+    """Synthetic LM corpus: mixture-of-Markov-chains token streams.
+
+    Each sequence follows one latent chain whose transition rows are sparse
+    — learnable structure so a ~100M model's loss actually decreases.
+    """
+    kz, kt, kw = jax.random.split(key, 3)
+    z = jax.random.randint(kz, (n_seqs,), 0, n_latent)
+    # per-latent sparse "next token" tables: vocab -> 8 candidates
+    cand = jax.random.randint(kt, (n_latent, vocab, 8), 0, vocab)
+
+    def gen_seq(zi, k):
+        def step(tok, kk):
+            nxt = cand[zi, tok, jax.random.randint(kk, (), 0, 8)]
+            return nxt, nxt
+
+        k0, ks = jax.random.split(k)
+        first = jax.random.randint(k0, (), 0, vocab)
+        _, toks = jax.lax.scan(step, first,
+                               jax.random.split(ks, seq_len - 1))
+        return jnp.concatenate([first[None], toks])
+
+    keys = jax.random.split(kw, n_seqs)
+    return jax.vmap(gen_seq)(z, keys).astype(jnp.int32)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+  flash_attention  sliding-window causal flash attention (long-context path)
+  robust_agg       masked trimmed-mean/median over the client axis
+"""

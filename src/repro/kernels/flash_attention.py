@@ -1,0 +1,118 @@
+"""Sliding-window causal flash attention — Pallas TPU kernel.
+
+TPU-native design:
+  * grid (B, Hq, n_q_blocks, n_kv_blocks); the kv-block axis is minor-most,
+    so VMEM scratch (acc, m, l) persists across the kv sweep — the online-
+    softmax flash pattern.
+  * BlockSpec tiles are (blk_q x head_dim) / (blk_k x head_dim) with
+    MXU-aligned 128-multiples; softmax statistics in fp32 on the VPU.
+  * GQA folded into the k/v index_map (kv head = q head // group) — no
+    materialised head repeat.
+  * causal + sliding-window masking fused; kv blocks entirely outside the
+    (causal, window) band are skipped via pl.when (the sub-quadratic claim
+    for long contexts: compute touches only S*W, not S^2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                blk_q, blk_k, n_k, causal, window, scale):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+
+    # block-level skip: kv block entirely above the diagonal (causal) or
+    # entirely left of the sliding window of every row in the q block
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + blk_q - 1)
+    if window:
+        live = jnp.logical_and(live, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, blk_q=128,
+                        blk_k=128, interpret=False):
+    """q: (B, Hq, S, dh); k/v: (B, Hkv, S, dh) -> (B, Hq, S, dh)."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    n_q, n_k = S // blk_q, S // blk_k
+    scale = dh ** -0.5
+
+    kernel = functools.partial(
+        _flash_body, blk_q=blk_q, blk_k=blk_k, n_k=n_k, causal=causal,
+        window=window, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, dh),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

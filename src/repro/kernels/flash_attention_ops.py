@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts the model's (B, S, H, dh) layout, transposes to the kernel's
+(B, H, S, dh), auto-selects interpret mode on CPU, and falls back to the
+ref for shapes the kernel can't tile (tiny smoke sizes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention_ref import flash_attention_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=None):
+    """q: (B, S, Hq, dh); k/v: (B, S, Hkv, dh) -> (B, S, Hq, dh)."""
+    B, S, Hq, dh = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if S % 128 != 0 or dh % 128 != 0:
+        out = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        if interpret is None:
+            interpret = not _on_tpu()
+        out = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                                  interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

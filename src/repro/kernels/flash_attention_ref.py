@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel (same contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Hq, S, dh); k/v: (B, Hkv, S, dh) -> (B, Hq, S, dh)."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, S, dh).astype(jnp.float32) * dh ** -0.5
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", qg, k.astype(jnp.float32))
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, S, dh).astype(q.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the robust aggregation kernel — delegates to the
+core aggregators (single source of truth for the contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+
+def robust_agg_ref(x, mask, *, mode="trimmed", trim_frac=0.2):
+    """x: (C, N) f32; mask: (C,) -> (N,)."""
+    if mode == "trimmed":
+        return aggregation.trimmed_mean(x, mask, trim_frac)
+    return aggregation.median(x, mask)

@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input x input-shape
+(no device allocation — the dry-run contract).
+
+``input_specs(cfg, shape)`` returns the batch pytree for train/prefill;
+decode shapes additionally need the cache/pos structs from
+``decode_specs``. [audio]/[vlm] frontends are STUBS: precomputed frame /
+patch embeddings of the right shape (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def shape_variant(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Per-shape config adjustments.
+
+    long_500k requires sub-quadratic attention: SSM/hybrid archs are
+    natively O(1)-state; every full-attention arch switches to its
+    sliding-window variant (window 8192, ring cache) for this shape —
+    nothing is skipped (DESIGN.md §4).
+    """
+    shape = INPUT_SHAPES[shape_name]
+    kw = {}
+    if shape.kind == "train":
+        # chunk the LM-head loss: full (B,S,V) logits at vocab 152k would
+        # dominate activation memory
+        kw["loss_chunk"] = 512
+    if shape_name == "long_500k" and cfg.arch_type not in ("ssm",):
+        if not cfg.sliding_window:
+            kw["sliding_window"] = 8192
+    return cfg.replace(**kw) if kw else cfg
+
+
+def train_batch_specs(cfg: ModelConfig, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    gb, s = shape.global_batch, shape.seq_len
+    batch = {"targets": SDS((gb, s), jnp.int32)}
+    if cfg.embed_inputs:
+        batch["tokens"] = SDS((gb, s), jnp.int32)
+    else:
+        batch["embeds"] = SDS((gb, s, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = SDS((gb, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def infer_batch_specs(cfg: ModelConfig, shape_name: str, *, decode=False):
+    shape = INPUT_SHAPES[shape_name]
+    gb = shape.global_batch
+    s = 1 if decode else shape.seq_len
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = SDS((gb, s), jnp.int32)
+    else:
+        batch["embeds"] = SDS((gb, s, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "vlm" and not decode:
+        batch["image_embeds"] = SDS((gb, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def cache_specs_struct(cfg: ModelConfig, shape_name: str):
+    """Abstract cache pytree (eval_shape over init_cache)."""
+    from repro.models import transformer
+
+    shape = INPUT_SHAPES[shape_name]
+    ring = bool(cfg.sliding_window) and shape_name == "long_500k"
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch,
+                                       shape.seq_len, ring=ring,
+                                       dtype=jnp.bfloat16))

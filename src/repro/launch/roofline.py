@@ -1,0 +1,113 @@
+"""Roofline-term derivation from compiled dry-run artifacts (no real TPU).
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw               (per chip)
+  collective term = sum(collective operand bytes x ring factor) / ICI_bw
+
+cost_analysis() runs on the *partitioned* module, so its flops/bytes are
+already per-chip. Collective bytes are parsed from the partitioned HLO
+text (per-chip shapes); all-reduce gets a 2x ring factor (reduce-scatter +
+all-gather phases), others 1x. '-done' halves of async pairs are skipped
+to avoid double counting.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|[fsu]\d+|bf16|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-chip bytes by collective kind from partitioned HLO text."""
+    out = {k: 0 for k in _COLL}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = re.search(r"=\s*(.*?)\s(" + "|".join(_COLL) + r")(-start)?\(",
+                      line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+def roofline(cost: dict, coll_bytes: Dict[str, int]) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = sum(v * (2 if k == "all-reduce" else 1)
+                 for k, v in coll_bytes.items())
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_coll = cbytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    return {
+        **terms,
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": cbytes,
+        "collective_by_kind": dict(coll_bytes),
+        "dominant": dom,
+        "bound_s": max(terms.values()),
+    }
+
+
+def count_params(params_struct) -> int:
+    import jax
+
+    return sum(int(_prod(l.shape)) for l in
+               jax.tree_util.tree_leaves(params_struct))
+
+
+def active_params(cfg, n_params: int) -> int:
+    """6*N_active*D MoE correction: expert FFN weights scale by top_k/E."""
+    if not cfg.n_experts:
+        return n_params
+    cycle_moe = sum(1 for k in cfg.layers if k == "moe")
+    expert_w = cycle_moe * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+    return n_params - expert_w + expert_w * cfg.top_k // cfg.n_experts
+
+
+def model_flops(cfg, n_params: int, shape, kind: str) -> float:
+    """6*N*D (train) / 2*N*D (inference forward) reference FLOPs, global."""
+    n_act = active_params(cfg, n_params)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def _prod(t):
+    r = 1
+    for x in t:
+        r *= x
+    return r

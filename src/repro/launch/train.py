@@ -1,0 +1,115 @@
+"""End-to-end federated training driver (runs on whatever devices exist).
+
+Runs the PodEngine: FedFiTS client groups on the mesh data axis, one SPMD
+program per round. With the default tiny-lm config this trains a ~100M
+decoder on synthetic non-IID LM data on CPU; on a pod the same script
+scales to the assigned architectures via --arch.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-lm --steps 50 \
+      --global-batch 16 --seq 256 --clients 4 [--ckpt-dir /tmp/ck]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core import pod
+from repro.data import synthetic
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.optim import optimizers
+from repro.sharding import specs as sh
+
+
+def synthetic_lm_batches(cfg, tc, n_clients, seed):
+    """Per-client non-IID LM streams: each client group draws from its own
+    latent Markov mixture component (label-skew analogue for LM data)."""
+    key = jax.random.PRNGKey(seed)
+    per = 64  # sequences per client pool
+    pools = []
+    for c in range(n_clients):
+        toks = synthetic.make_lm_tokens(
+            jax.random.fold_in(key, c), per, tc.seq_len + 1,
+            cfg.vocab_size, n_latent=2)
+        pools.append(np.asarray(toks))
+    pools = jnp.asarray(np.stack(pools))        # (C, per, S+1)
+
+    def sample(step_rng):
+        bc = tc.global_batch // n_clients
+        idx = jax.random.randint(step_rng, (n_clients, bc), 0, per)
+        seqs = jax.vmap(lambda p, i: p[i])(pools, idx)  # (C, bc, S+1)
+        seqs = seqs.reshape(tc.global_batch, tc.seq_len + 1)
+        return {"tokens": seqs[:, :-1], "targets": seqs[:, 1:]}
+
+    return jax.jit(sample)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduced arch variant")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    fed = FedConfig(n_clients=args.clients)
+    tc = TrainConfig(global_batch=args.global_batch, seq_len=args.seq,
+                     lr=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1))
+
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    key = jax.random.PRNGKey(tc.seed)
+    params = transformer.init_transformer(key, cfg)
+    opt_init, _ = optimizers.make_optimizer(tc)
+    state = pod.init_pod_state(params, opt_init, fed.n_clients, fed, key)
+
+    state_sh = sh.named(mesh, sh.param_specs(state, mesh=mesh))
+    state = jax.device_put(state, state_sh)
+    step_fn = jax.jit(pod.make_train_step(cfg, fed, tc),
+                      in_shardings=(state_sh, None),
+                      out_shardings=(state_sh, None))
+
+    start = 0
+    if args.ckpt_dir:
+        restored, at = ckpt.restore_latest(args.ckpt_dir, state, state_sh)
+        if restored is not None:
+            state, start = restored, at
+            print(f"restored checkpoint at step {at}")
+
+    sampler = synthetic_lm_batches(cfg, tc, fed.n_clients, tc.seed)
+    t0 = time.time()
+    with mesh:
+        for step in range(start, args.steps):
+            batch = sampler(jax.random.fold_in(key, step))
+            state, metrics = step_fn(state, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                m = {k: round(float(v), 4) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = round(time.time() - t0, 1)
+                print(json.dumps(m))
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_step(args.ckpt_dir, step + 1, state)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

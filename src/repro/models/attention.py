@@ -1,0 +1,176 @@
+"""GQA self-attention (full / sliding-window), cross-attention and KV caches.
+
+Three execution modes per layer:
+  * train/prefill: full-sequence attention, optional causal sliding window.
+    ``attn_impl='pallas'`` routes the score/softmax/value contraction to the
+    Pallas flash kernel (kernels/flash_attention.py).
+  * decode (full cache): one query token against a (B, L, Hkv, dh) cache.
+  * decode (ring cache, sliding window): (B, W, Hkv, dh) ring buffer —
+    O(window) memory for the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hq, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh)),
+        "wk": dense_init(ks[1], (d, hkv * dh)),
+        "wv": dense_init(ks[2], (d, hkv * dh)),
+        "wo": dense_init(ks[3], (hq * dh, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    return p
+
+
+def _proj(params, name, x, heads, dh, dtype):
+    y = x @ params["w" + name].astype(dtype)
+    if "b" + name in params:
+        y = y + params["b" + name].astype(dtype)
+    return y.reshape(*x.shape[:-1], heads, dh)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,Hkv,G,dh); k/v: (B,T,Hkv,dh); mask: broadcastable (B,1,1,S,T)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bshgd,bthd->bhgst", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out
+
+
+def causal_mask(s, t_offset=0, window=0):
+    """(S, T) boolean mask; query i at absolute pos i+t_offset attends key j."""
+    qpos = jnp.arange(s)[:, None] + t_offset
+    kpos = jnp.arange(s + t_offset)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_fwd(params, x, cfg, positions, *, window=0, cache=None,
+                  kv_source=None, layer_idx=0):
+    """Returns (out, new_cache).
+
+    x: (B, S, d).  kv_source: (B, T, d) for cross-attention (no rope/causal).
+    cache:
+      None                     -> train/prefill, no cache returned
+      {"k","v","length"}       -> full cache decode/prefill-fill
+      {"k","v","pos"} (ring)   -> sliding-window ring cache decode
+      {"ck","cv"}              -> frozen cross-attention KV
+    """
+    dtype = x.dtype
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    B, S, _ = x.shape
+
+    q = _proj(params, "q", x, hq, dh, dtype)
+
+    if kv_source is not None or (cache is not None and "ck" in cache):
+        # ---- cross attention: prefill (kv_source given) computes + stores
+        # the frozen KV; decode (S==1, no kv_source) reuses the cache ----
+        if kv_source is None:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            k = _proj(params, "k", kv_source, hkv, dh, dtype)
+            v = _proj(params, "v", kv_source, hkv, dh, dtype)
+            new_cache = {"ck": k.astype(cache["ck"].dtype),
+                         "cv": v.astype(cache["cv"].dtype)} \
+                if cache is not None else None
+        qg = q.reshape(B, S, hkv, g, dh)
+        mask = jnp.ones((1, 1, 1, S, k.shape[1]), bool)
+        out = _sdpa(qg, k, v, mask)
+        out = out.reshape(B, S, hq * dh).astype(dtype) @ params["wo"].astype(dtype)
+        return out, new_cache
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = _proj(params, "k", x, hkv, dh, dtype)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    v_new = _proj(params, "v", x, hkv, dh, dtype)
+
+    if cache is None:                              # ---- train / prefill ----
+        if cfg.attn_impl == "pallas" and S >= 128:
+            from repro.kernels import flash_attention_ops
+            out = flash_attention_ops.flash_attention(
+                q, k_new, v_new, causal=True, window=window)
+        else:
+            qg = q.reshape(B, S, hkv, g, dh)
+            mask = causal_mask(S, window=window)[None, None, None]
+            out = _sdpa(qg, k_new, v_new, mask)
+            out = out.reshape(B, S, hq * dh)
+        out = out.astype(dtype).reshape(B, S, hq * dh) @ params["wo"].astype(dtype)
+        return out, None
+
+    if "pos" in cache and S > 1:                   # ---- ring-cache prefill ----
+        W = cache["k"].shape[1]
+        # full windowed attention for outputs, then fill the ring with the
+        # last min(S, W) keys/values (assumes prefill starts at pos 0)
+        qg = q.reshape(B, S, hkv, g, dh)
+        mask = causal_mask(S, window=window)[None, None, None]
+        out = _sdpa(qg, k_new, v_new, mask)
+        out = out.reshape(B, S, hq * dh).astype(dtype) @ params["wo"].astype(dtype)
+        take = min(S, W)
+        slots = jnp.mod(jnp.arange(S - take, S), W)
+        k = cache["k"].at[:, slots].set(k_new[:, -take:].astype(cache["k"].dtype))
+        v = cache["v"].at[:, slots].set(v_new[:, -take:].astype(cache["v"].dtype))
+        return out, {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+
+    if "pos" in cache:                             # ---- ring-cache decode ----
+        W = cache["k"].shape[1]
+        pos = cache["pos"]                         # scalar absolute position
+        slot = jnp.mod(pos, W)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        # slot j holds absolute position: the largest p <= pos with p % W == j
+        j = jnp.arange(W)
+        abs_pos = pos - jnp.mod(pos - j, W)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if window:
+            valid &= abs_pos > pos - window
+        qg = q.reshape(B, S, hkv, g, dh)
+        mask = valid[None, None, None, None, :]
+        out = _sdpa(qg, k, v, mask)
+        out = out.reshape(B, S, hq * dh).astype(dtype) @ params["wo"].astype(dtype)
+        return out, {"k": k, "v": v, "pos": pos + 1}
+
+    # ---- full-cache: prefill-fill or decode ----
+    L = cache["k"].shape[1]
+    length = cache["length"]                       # tokens already in cache
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, length, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, length, 0, 0))
+    kpos = jnp.arange(L)
+    qpos = length + jnp.arange(S)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    qg = q.reshape(B, S, hkv, g, dh)
+    out = _sdpa(qg, k, v, mask[None, None, None])
+    out = out.reshape(B, S, hq * dh).astype(dtype) @ params["wo"].astype(dtype)
+    return out, {"k": k, "v": v, "length": length + S}
+
+
+def init_kv_cache(cfg, batch, max_len, *, ring=False, dtype=jnp.bfloat16):
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (batch, max_len, hkv, dh)
+    z = jnp.zeros(shape, dtype)
+    if ring:
+        return {"k": z, "v": z, "pos": jnp.array(0, jnp.int32)}
+    return {"k": z, "v": z, "length": jnp.array(0, jnp.int32)}

@@ -1,0 +1,97 @@
+"""Model facade: a uniform init/loss/forward API over every arch family.
+
+``build(cfg)`` returns a ``Model`` with:
+  init(key)                      -> params
+  loss(params, batch)            -> (loss, metrics)   # train step objective
+  forward(params, batch)         -> logits            # full-sequence
+  init_cache(batch, max_len)     -> cache pytree      # decode shapes
+  prefill(params, batch, cache)  -> (logits, cache)
+  decode(params, token_batch, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import small, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable = None
+    prefill: Callable = None
+    decode: Callable = None
+
+
+def build(cfg) -> Model:
+    if cfg.arch_type == "cnn":
+        def init(key):
+            return small.init_cnn(key, cfg)
+
+        def loss(params, batch):
+            logits = small.cnn_fwd(params, batch["x"])
+            l, a = small.classifier_loss(logits, batch["y"])
+            return l, {"loss": l, "acc": a}
+
+        return Model(cfg, init, loss,
+                     forward=lambda p, b: small.cnn_fwd(p, b["x"]))
+
+    if cfg.arch_type == "mlp":
+        def init(key):
+            return small.init_mlp_clf(key, cfg)
+
+        def loss(params, batch):
+            logits = small.mlp_clf_fwd(params, batch["x"])
+            l, a = small.classifier_loss(logits, batch["y"])
+            return l, {"loss": l, "acc": a}
+
+        return Model(cfg, init, loss,
+                     forward=lambda p, b: small.mlp_clf_fwd(p, b["x"]))
+
+    # ---- decoder transformers (all assigned archs) ----
+    def init(key):
+        return transformer.init_transformer(key, cfg)
+
+    def loss(params, batch):
+        return transformer.loss_fn(params, cfg, batch)
+
+    def forward(params, batch):
+        logits, _, _ = transformer.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            image_embeds=batch.get("image_embeds"))
+        return logits
+
+    def init_cache(batch_size, max_len, ring=False, dtype=jnp.bfloat16):
+        return transformer.init_cache(cfg, batch_size, max_len, ring=ring,
+                                      dtype=dtype)
+
+    def prefill(params, batch, cache):
+        # last-position logits only: full (B, S, vocab) logits at 32k x 152k
+        # would dominate memory and nothing downstream needs them
+        hidden, cache, _ = transformer.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            image_embeds=batch.get("image_embeds"), cache=cache,
+            collect_logits=False)
+        logits = transformer.lm_head(params, cfg, hidden[:, -1:])
+        return logits, cache
+
+    def decode(params, batch, cache, pos):
+        """batch: {tokens: (B,1)} or {embeds: (B,1,d)}; pos: scalar int32."""
+        B = (batch.get("tokens") if batch.get("tokens") is not None
+             else batch.get("embeds")).shape[0]
+        positions = jnp.broadcast_to(pos, (B, 1))
+        logits, cache, _ = transformer.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), positions=positions, cache=cache)
+        return logits, cache
+
+    return Model(cfg, init, loss, forward, init_cache, prefill, decode)

@@ -1,0 +1,75 @@
+"""The paper's own model scale: small CNN (MNIST / X-ray) and MLP (Crop tabular).
+
+These are the models the FedFiTS experiments actually train (paper §VI);
+they run per-client-replicated inside the SimEngine (core/fedfits.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_cnn(key, cfg, in_channels=1, image_size=28):
+    """n_layers conv blocks (3x3, stride-2 pool) + dense head."""
+    c = cfg.d_model
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    params = {"convs": []}
+    cin = in_channels
+    size = image_size
+    for i in range(cfg.n_layers):
+        cout = c * (2 ** i)
+        params["convs"].append({
+            "w": dense_init(ks[i], (3, 3, cin, cout), in_axis=(0, 1, 2)),
+            "b": jnp.zeros((cout,), jnp.float32),
+        })
+        cin = cout
+        size = (size + 1) // 2
+    feat = size * size * cin
+    params["dense"] = {"w": dense_init(ks[-2], (feat, cfg.d_ff)),
+                       "b": jnp.zeros((cfg.d_ff,), jnp.float32)}
+    params["head"] = {"w": dense_init(ks[-1], (cfg.d_ff, cfg.vocab_size)),
+                      "b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+    return params
+
+
+def cnn_fwd(params, x):
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    for cp in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x, cp["w"], window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + cp["b"])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["dense"]["w"] + params["dense"]["b"])
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def init_mlp_clf(key, cfg):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    dims = [cfg.d_model] + [cfg.d_ff] * (cfg.n_layers - 1) + [cfg.vocab_size]
+    return {"layers": [
+        {"w": dense_init(ks[i], (dims[i], dims[i + 1])),
+         "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+        for i in range(cfg.n_layers)
+    ]}
+
+
+def mlp_clf_fwd(params, x):
+    """x: (B, F) -> logits (B, n_classes)."""
+    for i, lp in enumerate(params["layers"]):
+        x = x @ lp["w"] + lp["b"]
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def classifier_loss(logits, labels):
+    """(mean CE, accuracy) — fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,138 @@
+"""Mamba-style selective SSM block (used standalone and inside hybrid layers).
+
+TPU adaptation: the selective scan runs as a *chunked associative scan* —
+``lax.scan`` over chunks of ``cfg.scan_chunk`` steps carrying the hidden
+state, with a log-depth ``lax.associative_scan`` inside each chunk. This
+bounds the (B, chunk, d_inner, state) temporaries (VMEM/HBM friendly)
+instead of materialising the full (B, S, d_inner, state) tensor, and keeps
+the inner dimension shardable over the "model" mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_depthwise_conv, dense_init
+
+
+def init_mamba(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    st, dtr, K = cfg.ssm_state, cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real A initialisation: A = -(1..state)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (K, di)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * st)),
+        "dt_proj": dense_init(ks[3], (dtr, di)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _ssm_coeffs(params, xc, cfg, dtype, step_mask=None):
+    """xc: (..., di) conv output -> decay a and input b, plus C for readout.
+
+    step_mask zeroes dt on padded steps so they are identity transitions
+    (a=1, b=0) and do not perturb the carried state.
+    """
+    st, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    dbc = (xc @ params["x_proj"].astype(dtype)).astype(jnp.float32)
+    dt_r, Bm, Cm = jnp.split(dbc, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])                  # (..., di)
+    if step_mask is not None:
+        dt = dt * step_mask
+    A = -jnp.exp(params["A_log"])                              # (di, st)
+    a = jnp.exp(dt[..., None] * A)                             # (..., di, st)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    sd = jnp.dtype(cfg.ssm_scan_dtype)
+    return a.astype(sd), b.astype(sd), Cm
+
+
+def mamba_fwd(params, x, cfg, state=None):
+    """x: (B, S, d). state: {"h": (B,di,st), "conv": (B,K-1,di)} for decode.
+
+    Returns (y, new_state or None).
+    """
+    dtype = x.dtype
+    di = params["A_log"].shape[0]
+    xz = x @ params["in_proj"].astype(dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    if state is not None and x.shape[1] == 1:      # ---- single-step decode ----
+        xc, conv_state = causal_depthwise_conv(
+            xin, params["conv_w"], params["conv_b"], state["conv"])
+        xc = jax.nn.silu(xc)[:, 0]                 # (B, di)
+        a, b, Cm = _ssm_coeffs(params, xc, cfg, dtype)
+        h = a * state["h"] + b                     # (B, di, st)
+        y = jnp.einsum("bds,bs->bd", h, Cm) + params["D"] * xc.astype(jnp.float32)
+        y = (y.astype(dtype) * jax.nn.silu(z[:, 0]))[:, None]
+        out = y @ params["out_proj"].astype(dtype)
+        return out, {"h": h, "conv": conv_state}
+
+    # ---- full sequence (train, or prefill when state is given) ----
+    B, S, _ = x.shape
+    if state is not None:
+        # prefill: seed conv left-context and h from the carried state
+        K = params["conv_w"].shape[0]
+        xin_ext = jnp.concatenate([state["conv"].astype(xin.dtype), xin], 1)
+        xc_ext, _ = causal_depthwise_conv(
+            xin_ext, params["conv_w"], params["conv_b"])
+        xc = xc_ext[:, K - 1:]
+        conv_tail = xin_ext[:, -(K - 1):]
+    else:
+        xc, _ = causal_depthwise_conv(xin, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    chunk = min(cfg.scan_chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    xc_c = xc_p.reshape(B, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+    smask = (jnp.arange(n_chunks * chunk) < S).astype(jnp.float32)
+    smask_c = smask.reshape(n_chunks, 1, chunk, 1)
+
+    st = cfg.ssm_state
+    sd = jnp.dtype(cfg.ssm_scan_dtype)
+    h0 = (state["h"].astype(sd) if state is not None
+          else jnp.zeros((B, di, st), sd))
+
+    def body(h_prev, xs):                           # xck: (B, chunk, di)
+        xck, mk = xs                                # mk: (1, chunk, 1)
+        a, b, Cm = _ssm_coeffs(params, xck, cfg, dtype, step_mask=mk)
+        # prepend carried state as step 0 contribution: h_t = a_t h_{t-1} + b_t
+        b = b.at[:, 0].add(a[:, 0] * h_prev)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = jnp.einsum("bcds,bcs->bcd", hh.astype(jnp.float32), Cm)
+        return hh[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, h0, (xc_c, smask_c),
+                              unroll=n_chunks if cfg.scan_unroll else 1)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, di)[:, :S]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dtype)
+    if state is not None:
+        return out, {"h": h_last.astype(state["h"].dtype),
+                     "conv": conv_tail.astype(state["conv"].dtype)}
+    return out, None
+
+
+def init_mamba_state(params, batch, cfg, dtype=jnp.float32):
+    di = params["A_log"].shape[0]
+    K = params["conv_w"].shape[0]
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+    }

@@ -1,0 +1,272 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [arXiv:2405.04517].
+
+TPU adaptation:
+  * mLSTM trains in *chunkwise-parallel* form — intra-chunk attention-like
+    MXU matmuls + an inter-chunk recurrent carry (C_hat, n_hat, m) under a
+    ``lax.scan`` — instead of a 1-step-per-token scan. Exponential gating is
+    stabilised in log space (stabiliser m carried across chunks).
+  * sLSTM keeps its inherently-sequential h-recurrence (per the paper it is
+    not parallelisable) as a ``lax.scan`` over time, vectorised over
+    batch/heads; the 350M config uses it only every 8th layer.
+Decode for both is an O(1) recurrent step (long_500k friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (causal_depthwise_conv, dense_init,
+                                 group_norm, init_rms_norm)
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    di = 2 * d                           # xLSTM pre-up-projection factor 2
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[2], (di, di)),
+        "wk": dense_init(ks[3], (di, di)),
+        "wv": dense_init(ks[4], (di, di)),
+        "wi": dense_init(ks[5], (di, H)),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "wf": dense_init(ks[6], (di, H)),
+        "bf": jnp.full((H,), 3.0, jnp.float32),   # forget-gate bias init high
+        "gn": init_rms_norm(di)["scale"],
+        "down": dense_init(ks[7], (di, d)),
+    }
+
+
+def _mlstm_inputs(params, xm, H, dtype):
+    di = params["wq"].shape[0]
+    dh = di // H
+    q = (xm @ params["wq"].astype(dtype)).reshape(*xm.shape[:-1], H, dh)
+    k = (xm @ params["wk"].astype(dtype)).reshape(*xm.shape[:-1], H, dh)
+    v = (xm @ params["wv"].astype(dtype)).reshape(*xm.shape[:-1], H, dh)
+    li = (xm @ params["wi"].astype(dtype)).astype(jnp.float32) + params["bi"]
+    lf = jax.nn.log_sigmoid(
+        (xm @ params["wf"].astype(dtype)).astype(jnp.float32) + params["bf"])
+    return q, k / jnp.sqrt(dh).astype(dtype), v, li, lf
+
+
+def mlstm_fwd(params, x, cfg, state=None):
+    """x: (B, S, d). state {"C","n","m","conv"} for decode. -> (y, state)."""
+    dtype = x.dtype
+    H = cfg.n_heads
+    uz = x @ params["up"].astype(dtype)
+    xm, z = jnp.split(uz, 2, axis=-1)
+
+    if state is not None and x.shape[1] == 1:   # ---- O(1) recurrent decode ----
+        xc, conv_state = causal_depthwise_conv(
+            xm, params["conv_w"], params["conv_b"], state["conv"])
+        xc = jax.nn.silu(xc)
+        q, k, v, li, lf = _mlstm_inputs(params, xc[:, 0], H, dtype)
+        q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+        m_new = jnp.maximum(lf + state["m"], li)          # (B, H)
+        fp = jnp.exp(lf + state["m"] - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        C = fp[..., None] * state["C"] + ip[..., None] * (k32[..., None] * v32[..., None, :])
+        n = fp * state["n"] + ip * k32
+        num = jnp.einsum("bhkv,bhk->bhv", C, q32)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q32)),
+                          jnp.exp(-m_new))[..., None]
+        h = (num / den).reshape(x.shape[0], 1, -1).astype(dtype)
+        h = group_norm(h, params["gn"], H)
+        out = (h * jax.nn.silu(z)) @ params["down"].astype(dtype)
+        return out, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+    # ---- chunkwise-parallel form (train, or prefill when state given) ----
+    B, S, d = x.shape
+    if state is not None:
+        K = params["conv_w"].shape[0]
+        xm_ext = jnp.concatenate([state["conv"].astype(xm.dtype), xm], 1)
+        xc_ext, _ = causal_depthwise_conv(
+            xm_ext, params["conv_w"], params["conv_b"])
+        xc = xc_ext[:, K - 1:]
+        conv_tail = xm_ext[:, -(K - 1):]
+    else:
+        xc, _ = causal_depthwise_conv(xm, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    q, k, v, li, lf = _mlstm_inputs(params, xc, H, dtype)   # (B,S,H,dh), (B,S,H)
+    di = q.shape[-1] * H
+    dh = q.shape[-1]
+    L = min(cfg.scan_chunk, S)
+    n_chunks = -(-S // L)
+    pad = n_chunks * L - S
+
+    # padded steps must not contribute: force their input gate to -inf
+    if pad:
+        li = jnp.concatenate(
+            [li, jnp.full((B, pad, H), -1e30, li.dtype)], axis=1)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+
+    def chunkify2(t):
+        t = t.reshape(B, n_chunks, L, *t.shape[2:])
+        return jnp.moveaxis(t, 1, 0)                        # (nc, B, L, ...)
+
+    qc, kc, vc = chunkify2(q), chunkify2(k), chunkify2(v)
+    lic, lfc = chunkify2(li), chunkify2(lf)
+
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        q_, k_, v_, li_, lf_ = inp                          # (B,L,H,dh)/(B,L,H)
+        q32, k32, v32 = (t.astype(jnp.float32) for t in (q_, k_, v_))
+        b = jnp.cumsum(lf_, axis=1)                         # (B,L,H) log decay from chunk start
+        g = jax.lax.cummax(li_ - b, axis=1)                 # (B,L,H)
+        u = jnp.maximum(m_prev[:, None], g)                 # m_t = b_t + u_t
+        # intra-chunk weights: w[t,s] = exp(li_s - b_s - u_t + b_t - b_t)... =
+        #   exp((li_s - b_s) - u_t) for s <= t
+        wlog = (li_ - b)[:, None, :, :] - u[:, :, None, :]  # (B,T,Sk,H)
+        w = jnp.exp(jnp.where(tri[None, :, :, None], wlog, -jnp.inf))
+        scores = jnp.einsum("bthd,bshd->btsh", q32, k32)
+        h_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, v32)
+        n_intra = jnp.einsum("btsh,bshd->bthd", w, k32)
+        # inter-chunk: coeff exp(m_prev - u_t)
+        c_int = jnp.exp(m_prev[:, None] - u)                # (B,L,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", q32, C_prev) * c_int[..., None]
+        n_inter = n_prev[:, None] * c_int[..., None]
+        n_t = n_intra + n_inter
+        m_t = b + u
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, q32)),
+                          jnp.exp(-m_t))[..., None]
+        h_t = (h_intra + h_inter) / den                     # (B,L,H,dh)
+        # carry update at chunk end: C_hat is the true C rescaled by e^{-m},
+        # m_new = bL + uL, so each step-s term carries weight
+        # exp(bL - b_s + li_s - m_new) = exp(li_s - b_s - uL)
+        uL = u[:, -1]
+        bL = b[:, -1]
+        wC = jnp.exp((li_ - b) - uL[:, None])               # (B,L,H)
+        C_new = jnp.exp(m_prev - uL)[..., None, None] * C_prev + \
+            jnp.einsum("bsh,bshd,bshe->bhde", wC, k32, v32)
+        n_new = jnp.exp(m_prev - uL)[..., None] * n_prev + \
+            jnp.einsum("bsh,bshd->bhd", wC, k32)
+        m_new = bL + uL
+        return (C_new, n_new, m_new), h_t
+
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc),
+                                    unroll=n_chunks if cfg.scan_unroll else 1)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, n_chunks * L, di)[:, :S]
+    h = group_norm(h.astype(dtype), params["gn"], H)
+    out = (h * jax.nn.silu(z)) @ params["down"].astype(dtype)
+    if state is not None:
+        return out, {"C": Cf, "n": nf, "m": mf,
+                     "conv": conv_tail.astype(state["conv"].dtype)}
+    return out, None
+
+
+def init_mlstm_state(params, batch, cfg, dtype=jnp.float32):
+    H = cfg.n_heads
+    di = params["wq"].shape[0]
+    dh = di // H
+    K = params["conv_w"].shape[0]
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+    }
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+def init_slstm(key, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 5)
+    w = dense_init(ks[0], (d, 4 * d))               # gates i,f,z,o from x
+    r = dense_init(ks[1], (H, dh, 4 * dh))          # block-diag recurrent
+    dff = -(-int(d * 4 / 3) // 128) * 128   # 128-aligned for 16-way sharding
+    return {
+        "w": w,
+        "r": r,
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "gn": init_rms_norm(d)["scale"],
+        "up_g": dense_init(ks[2], (d, dff)),
+        "up_u": dense_init(ks[4], (d, dff)),
+        "down": dense_init(ks[3], (dff, d)),
+    }
+
+
+def _slstm_step(params, carry, gx, H):
+    """gx: (B, 4d) pre-activations from x laid out as [i|f|z|o] blocks of d.
+
+    carry: (c, n, m, h) each (B, H, dh).
+    """
+    c, n, m, h = carry
+    B = gx.shape[0]
+    d = h.shape[-1] * H
+    dh = d // H
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"])        # (B,H,4dh) [i|f|z|o]
+    gx4 = gx.reshape(B, 4, H, dh)                           # gate-major blocks
+    bias = params["b"].reshape(4, H, dh)
+    g = gx4 + jnp.moveaxis(rec.reshape(B, H, 4, dh), 2, 1) + bias
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]     # (B,H,dh)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    ip = jnp.exp(gi - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(gz)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_fwd(params, x, cfg, state=None):
+    dtype = x.dtype
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    gx = (x @ params["w"].astype(dtype)).astype(jnp.float32)  # (B,S,4d)
+
+    if state is not None and S == 1:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+        carry, h = _slstm_step(params, carry, gx[:, 0], H)
+        hseq = h[:, None].reshape(B, 1, d)
+        new_state = dict(zip(("c", "n", "m", "h"), carry))
+    else:
+        if state is not None:
+            init = (state["c"], state["n"], state["m"], state["h"])
+        else:
+            c0 = jnp.zeros((B, H, dh), jnp.float32)
+            m0 = jnp.full((B, H, dh), -1e30, jnp.float32)
+            init = (c0, c0, m0, c0)
+
+        def body(carry, g):
+            return _slstm_step(params, carry, g, H)
+
+        final, hs = jax.lax.scan(body, init, jnp.moveaxis(gx, 1, 0))
+        hseq = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+        new_state = (dict(zip(("c", "n", "m", "h"), final))
+                     if state is not None else None)
+
+    y = group_norm(hseq.astype(dtype), params["gn"], H)
+    # post-up-projection (factor 4/3, GLU)
+    u = jax.nn.gelu(y @ params["up_g"].astype(dtype)) * (y @ params["up_u"].astype(dtype))
+    return u @ params["down"].astype(dtype), new_state
+
+
+def init_slstm_state(params, batch, cfg, dtype=jnp.float32):
+    d = params["gn"].shape[0]
+    H = cfg.n_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "h": z}

@@ -1,0 +1,111 @@
+"""Minimal optimizer substrate (no optax in this environment).
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``; apply with ``apply_updates``. All states are pytrees
+so they shard like the params they track.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: any
+    count: jnp.ndarray
+
+
+class AdamState(NamedTuple):
+    mu: any
+    nu: any
+    count: jnp.ndarray
+
+
+def _zeros_like(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def sgd(lr_fn, momentum=0.9):
+    def init(params):
+        return SGDState(_zeros_like(params), jnp.int32(0))
+
+    def update(grads, state, params=None):
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        lr = lr_fn(state.count)
+        upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return upd, SGDState(mu, state.count + 1)
+
+    return init, update
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        return AdamState(_zeros_like(params), _zeros_like(params),
+                         jnp.int32(0))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        lr = lr_fn(state.count)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        return (jax.tree_util.tree_map(upd, mu, nu, params),
+                AdamState(mu, nu, c))
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def make_optimizer(train_cfg):
+    lr_fn = warmup_cosine(train_cfg.lr, train_cfg.warmup_steps,
+                          train_cfg.total_steps)
+    if train_cfg.optimizer == "sgd":
+        return sgd(lr_fn)
+    if train_cfg.optimizer in ("adam", "adamw"):
+        wd = train_cfg.weight_decay if train_cfg.optimizer == "adamw" else 0.0
+        return adamw(lr_fn, train_cfg.b1, train_cfg.b2, train_cfg.eps, wd)
+    raise ValueError(train_cfg.optimizer)
+
+
+def warmup_cosine(peak, warmup, total):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

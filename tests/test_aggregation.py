@@ -1,0 +1,91 @@
+"""Unit tests: robust trust-aware aggregation (paper Eq. 11 + Table II)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(k=8):
+    return {"w": jax.random.normal(KEY, (k, 4, 3)),
+            "b": jax.random.normal(jax.random.fold_in(KEY, 1), (k, 5))}
+
+
+def test_weighted_mean_matches_numpy():
+    t = _tree()
+    w = jnp.array([1, 2, 3, 4, 0, 0, 0, 0], jnp.float32)
+    mask = (w > 0).astype(jnp.float32)
+    out = aggregation.weighted_mean(t, w, mask)
+    wn = np.asarray(w / w.sum())
+    ref = np.tensordot(wn, np.asarray(t["w"]), axes=(0, 0))
+    assert np.allclose(out["w"], ref, atol=1e-6)
+
+
+def test_median_masked_matches_numpy():
+    t = _tree()
+    mask = jnp.array([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+    out = aggregation.median(t, mask)
+    ref = np.median(np.asarray(t["w"])[:5], axis=0)
+    assert np.allclose(out["w"], ref, atol=1e-6)
+
+
+def test_trimmed_mean_matches_scipy_style():
+    t = _tree()
+    mask = jnp.ones((8,), jnp.float32)
+    out = aggregation.trimmed_mean(t, mask, trim_frac=0.25)
+    arr = np.sort(np.asarray(t["w"]), axis=0)[2:-2]
+    assert np.allclose(out["w"], arr.mean(0), atol=1e-6)
+
+
+def test_krum_rejects_outlier():
+    k = 8
+    base = jax.random.normal(KEY, (k, 10)) * 0.1
+    poisoned = base.at[0].set(100.0)
+    out = aggregation.krum({"w": poisoned}, jnp.ones((k,)), f=1)
+    assert np.abs(np.asarray(out["w"])).max() < 1.0
+
+
+def test_cosine_outlier_gate():
+    k = 6
+    upd = jnp.ones((k, 20))
+    upd = upd.at[5].set(-1.0)            # sign-flipped client
+    ref = jnp.ones((20,))
+    gate = aggregation.cosine_outlier_mask({"w": upd}, {"w": ref},
+                                           jnp.ones((k,)), thresh=-0.5)
+    assert np.array_equal(np.asarray(gate), [1, 1, 1, 1, 1, 0])
+
+
+def test_aggregate_pipeline_defends_sign_flip():
+    k = 8
+    honest = jax.random.normal(KEY, (k, 30)) * 0.01 + 1.0
+    upd = {"w": honest.at[0].set(-50.0).at[1].set(-50.0)}
+    mask = jnp.ones((k,))
+    weights = jnp.ones((k,))
+    cfg = FedConfig(aggregator="median")
+    out = aggregation.aggregate(upd, weights, mask, cfg)
+    assert np.all(np.asarray(out["w"]) > 0.5)
+    # plain mean without the pipeline is destroyed
+    naive = aggregation.weighted_mean(upd, weights, mask)
+    assert np.all(np.asarray(naive["w"]) < 0.0)
+
+
+def test_trust_update_rewards_selected_high_scores():
+    trust = jnp.full((4,), 0.5)
+    scores = jnp.array([1.0, 0.1, 1.0, 0.1])
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    new = aggregation.update_trust(trust, scores, mask, decay=0.5)
+    assert float(new[0]) > float(new[1])        # high score -> more trust
+    assert float(new[2]) == float(new[3])       # unselected drift together
+
+
+def test_two_stage_matches_flat_mean_for_uniform():
+    k, n_cohorts = 4, 2
+    upd = jax.random.normal(KEY, (n_cohorts, k, 7))
+    w = jnp.ones((n_cohorts, k))
+    m = jnp.ones((n_cohorts, k))
+    cfg = FedConfig(aggregator="fedavg", cosine_outlier_thresh=-1.0)
+    out = aggregation.two_stage(upd, w, m, cfg)
+    assert np.allclose(out, np.asarray(upd).mean((0, 1)), atol=1e-6)

@@ -1,0 +1,80 @@
+"""Unit tests: FedFiTS fitness metrics (paper Eqs. 1-3, 18-19)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fitness
+
+
+def test_theta_geometry():
+    # pure-loss point lies on the X axis -> angle 0
+    th = fitness.theta(jnp.array([1.0]), jnp.array([0.0]),
+                       jnp.array([1.0]), jnp.array([0.0]))
+    assert np.allclose(th, 0.0, atol=1e-6)
+    # pure-accuracy point -> pi/2
+    th = fitness.theta(jnp.array([0.0]), jnp.array([1.0]),
+                       jnp.array([0.0]), jnp.array([1.0]))
+    assert np.allclose(th, np.pi / 2, atol=1e-6)
+
+
+def test_theta_monotone_in_accuracy():
+    gl = jnp.full((5,), 1.0)
+    ll = jnp.full((5,), 1.0)
+    ga = jnp.linspace(0.1, 0.9, 5)
+    la = ga
+    th = np.asarray(fitness.theta(gl, ga, ll, la))
+    assert np.all(np.diff(th) > 0), "higher accuracy must raise theta"
+
+
+def test_theta_domain():
+    rng = np.random.default_rng(0)
+    gl, ll = rng.uniform(0, 10, (2, 100))
+    ga, la = rng.uniform(0, 1, (2, 100))
+    th = np.asarray(fitness.theta(jnp.asarray(gl), jnp.asarray(ga),
+                                  jnp.asarray(ll), jnp.asarray(la)))
+    assert np.all(th >= 0) and np.all(th <= np.pi / 2 + 1e-6)
+
+
+def test_paper_exact_theta_degenerates_at_high_loss():
+    """Documents the printed-formula pathology that motivated the fix."""
+    gl = ll = jnp.array([6.0])
+    ga = la = jnp.array([0.01])
+    exact = fitness.theta(gl, ga, ll, la, paper_exact=True)
+    fixed = fitness.theta(gl, ga, ll, la)
+    assert float(exact[0]) == pytest.approx(0.0, abs=1e-6)
+    assert float(fixed[0]) > 0.0
+
+
+def test_score_and_threshold():
+    q = jnp.array([0.5, 0.3, 0.2])
+    th = jnp.array([0.2, 0.8, 0.5])
+    s = fitness.score(q, th, alpha=0.5)
+    assert np.allclose(s, 0.5 * q + 0.5 * th)
+    t = fitness.threshold(s, beta=0.1)
+    assert np.allclose(t, float(jnp.mean(s)) * 0.9)
+    # beta=0 -> threshold is exactly the average line (paper Fig. 1b)
+    assert np.allclose(fitness.threshold(s, 0.0), jnp.mean(s))
+
+
+def test_threshold_respects_mask():
+    s = jnp.array([1.0, 1.0, 100.0])
+    mask = jnp.array([1.0, 1.0, 0.0])
+    assert np.allclose(fitness.threshold(s, 0.0, mask), 1.0)
+
+
+def test_dynamic_alpha_majority_property():
+    """Paper SSV: alpha > 0.5 iff #(q_k > theta_k) > #(q_k < theta_k)."""
+    q = jnp.array([0.9, 0.8, 0.7, 0.1])
+    th = jnp.array([0.1, 0.1, 0.9, 0.9])
+    a = float(fitness.dynamic_alpha(q, th))
+    assert a == pytest.approx(0.5)
+    q2 = jnp.array([0.9, 0.8, 0.95, 0.1])
+    a2 = float(fitness.dynamic_alpha(q2, th))
+    assert a2 > 0.5
+
+
+def test_data_quality_normalised():
+    n = jnp.array([10.0, 30.0, 60.0])
+    q = fitness.data_quality(n)
+    assert np.allclose(q.sum(), 1.0)
+    assert np.allclose(q, [0.1, 0.3, 0.6])

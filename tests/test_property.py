@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, fitness, selection
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats01 = st.floats(0.0, 1.0, allow_nan=False)
+lossf = st.floats(0.0, 20.0, allow_nan=False)
+
+
+@given(st.lists(st.tuples(lossf, floats01, lossf, floats01),
+                min_size=1, max_size=16))
+def test_theta_always_in_first_quadrant(rows):
+    gl, ga, ll, la = (jnp.asarray(x, jnp.float32) for x in zip(*rows))
+    th = np.asarray(fitness.theta(gl, ga, ll, la))
+    assert np.all(th >= -1e-6) and np.all(th <= np.pi / 2 + 1e-6)
+
+
+@given(st.lists(floats01, min_size=2, max_size=16),
+       st.floats(0.0, 1.0, allow_nan=False))
+def test_threshold_never_exceeds_mean(scores, beta):
+    s = jnp.asarray(scores, jnp.float32)
+    t = float(fitness.threshold(s, beta))
+    assert t <= float(s.mean()) + 1e-6
+
+
+@given(st.integers(2, 12), st.integers(0, 1000))
+def test_weighted_mean_in_convex_hull(k, seed):
+    key = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(key, (k, 6))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (k,)) + 0.01
+    mask = jnp.ones((k,))
+    out = np.asarray(aggregation.weighted_mean({"x": upd}, w, mask)["x"])
+    lo, hi = np.asarray(upd).min(0), np.asarray(upd).max(0)
+    assert np.all(out >= lo - 1e-5) and np.all(out <= hi + 1e-5)
+
+
+@given(st.integers(3, 12), st.integers(0, 1000),
+       st.floats(0.0, 0.3, allow_nan=False))
+def test_trimmed_mean_bounded_and_permutation_invariant(k, seed, trim):
+    key = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(key, (k, 5))
+    mask = jnp.ones((k,))
+    out = aggregation.trimmed_mean({"x": upd}, mask, trim)["x"]
+    lo, hi = np.asarray(upd).min(0), np.asarray(upd).max(0)
+    assert np.all(np.asarray(out) >= lo - 1e-5)
+    assert np.all(np.asarray(out) <= hi + 1e-5)
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), k)
+    out_p = aggregation.trimmed_mean({"x": upd[perm]}, mask, trim)["x"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-5)
+
+
+@given(st.integers(2, 12), st.integers(0, 1000))
+def test_median_is_actual_masked_median(k, seed):
+    key = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(key, (k, 4))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (k,)) > 0.3
+            ).astype(jnp.float32)
+    if float(mask.sum()) == 0:
+        mask = mask.at[0].set(1.0)
+    out = np.asarray(aggregation.median({"x": upd}, mask)["x"])
+    sel = np.asarray(upd)[np.asarray(mask) > 0]
+    np.testing.assert_allclose(out, np.median(sel, axis=0), atol=1e-5)
+
+
+@given(st.integers(2, 16), st.floats(0.05, 1.0), st.integers(0, 100))
+def test_fedrand_selects_exactly_ceil_ck(k, c, seed):
+    avail = jnp.ones((k,))
+    m = selection.fedrand_select(avail, c, jax.random.PRNGKey(seed))
+    assert float(m.sum()) == np.ceil(c * k)
+
+
+@given(st.integers(2, 16), st.integers(0, 100))
+def test_selection_subset_of_available(k, seed):
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.uniform(key, (k,))
+    avail = (jax.random.uniform(jax.random.fold_in(key, 1), (k,)) > 0.4
+             ).astype(jnp.float32)
+    if float(avail.sum()) == 0:
+        avail = avail.at[0].set(1.0)
+    mask = selection.fedfits_select(scores, 0.2, avail,
+                                    jax.random.fold_in(key, 2),
+                                    explore_eps=0.3, floor_prob=0.3)
+    assert np.all(np.asarray(mask) <= np.asarray(avail))
+
+
+@given(st.integers(1, 10), st.integers(0, 100))
+def test_dynamic_alpha_bounds(k, seed):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.uniform(key, (k,))
+    th = jax.random.uniform(jax.random.fold_in(key, 1), (k,))
+    a = float(fitness.dynamic_alpha(q, th))
+    assert 0.0 <= a <= 1.0

@@ -1,0 +1,68 @@
+"""Unit tests: selection policies (FedFiTS election + baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection
+
+KEY = jax.random.PRNGKey(0)
+AVAIL = jnp.ones((8,), jnp.float32)
+
+
+def test_fedfits_selects_above_threshold():
+    scores = jnp.array([0.9, 0.8, 0.7, 0.6, 0.1, 0.1, 0.1, 0.1])
+    mask = selection.fedfits_select(scores, beta=0.0, avail=AVAIL, rng=KEY)
+    mean = float(scores.mean())
+    expected = (np.asarray(scores) >= mean).astype(np.float32)
+    assert np.array_equal(np.asarray(mask), expected)
+
+
+def test_beta_opens_the_door():
+    """Larger beta admits borderline (yellow) clients — paper Fig. 1b."""
+    scores = jnp.array([1.0, 0.95, 0.5, 0.44, 0.1, 0.1, 0.1, 0.1])
+    closed = selection.fedfits_select(scores, 0.0, AVAIL, KEY)
+    open_ = selection.fedfits_select(scores, 0.5, AVAIL, KEY)
+    assert open_.sum() >= closed.sum()
+
+
+def test_unavailable_clients_never_selected():
+    scores = jnp.ones((8,))
+    avail = AVAIL.at[3].set(0.0)
+    mask = selection.fedfits_select(scores, 0.5, avail, KEY)
+    assert float(mask[3]) == 0.0
+
+
+def test_empty_team_fallback():
+    # all scores equal and below an impossible threshold cannot happen via
+    # Eq.3, so force it with beta<0 (threshold above mean)
+    scores = jnp.array([1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 2.0])
+    mask = selection.fedfits_select(scores, -0.9, AVAIL, KEY, min_team=1)
+    assert float(mask.sum()) >= 1.0
+
+
+def test_participation_floor_includes_everyone():
+    scores = jnp.array([1.0] * 7 + [0.0])
+    sel = np.zeros(8)
+    for i in range(200):
+        m = selection.fedfits_select(scores, 0.0, AVAIL,
+                                     jax.random.fold_in(KEY, i),
+                                     floor_prob=0.3)
+        sel += np.asarray(m)
+    assert sel[7] > 20  # starving client still participates ~30% of rounds
+
+
+def test_fedrand_team_size():
+    for c in [0.25, 0.5, 1.0]:
+        m = selection.fedrand_select(AVAIL, c, KEY)
+        assert float(m.sum()) == np.ceil(c * 8)
+
+
+def test_fedpow_picks_highest_loss():
+    losses = jnp.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8])
+    m = selection.fedpow_select(losses, AVAIL, d=8, m=3, rng=KEY)
+    assert np.array_equal(np.where(np.asarray(m) > 0)[0], [5, 6, 7])
+
+
+def test_participation_ratio():
+    assert float(selection.participation_ratio(jnp.array([0, 1, 2, 0.0]))) \
+        == 0.5

@@ -1,0 +1,60 @@
+"""Unit tests: slotted scheduling state machine (paper Eqs. 4-5)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import slots
+
+
+def run_sequence(thetas, msl, pft, start_t=2):
+    st = slots.init_slot_state()
+    # seed prev_theta
+    st, _ = slots.update(st, jnp.float32(thetas[0]), jnp.int32(start_t),
+                         msl, pft)
+    out = []
+    for i, th in enumerate(thetas[1:], start=start_t + 1):
+        st, h = slots.update(st, jnp.float32(th), jnp.int32(i), msl, pft)
+        out.append((int(st.p), bool(h)))
+    return out
+
+
+def test_pft_triggers_on_consecutive_decline():
+    # theta declines 3 times; pft=2 -> h fires when p reaches 2
+    seq = run_sequence([1.0, 0.9, 0.8, 0.7], msl=100, pft=2)
+    ps = [p for p, _ in seq]
+    hs = [h for _, h in seq]
+    assert ps == [1, 2, 3]
+    assert hs[1] is True  # p=2 >= pft
+
+
+def test_counter_resets_on_improvement():
+    seq = run_sequence([1.0, 0.9, 1.1, 1.0], msl=100, pft=3)
+    ps = [p for p, _ in seq]
+    assert ps == [1, 0, 1]
+
+
+def test_msl_boundary_forces_reselection():
+    st = slots.init_slot_state()
+    # improving theta so p stays 0; h must still fire when (t+1) % msl == 0
+    fired = []
+    for t in range(2, 12):
+        st, h = slots.update(st, jnp.float32(t), jnp.int32(t), 5, 99)
+        fired.append((t, bool(h)))
+    assert all(h == (((t + 1) % 5) == 0) for t, h in fired)
+
+
+def test_round_one_forces_ffa():
+    st = slots.init_slot_state()
+    _, h = slots.update(st, jnp.float32(0.0), jnp.int32(1), 100, 100)
+    assert bool(h) is True
+
+
+def test_adaptive_slots_stable_team_gets_longer_slots():
+    st = slots.init_slot_state()
+    # perfectly stable theta: variance -> 0 -> msl_eff -> 2*msl,
+    # so (t+1) % msl boundaries inside (msl, 2*msl) do NOT fire
+    fires = []
+    for t in range(2, 10):
+        st, h = slots.update(st, jnp.float32(5.0), jnp.int32(t), 4, 99,
+                             adaptive=True)
+        fires.append(bool(h))
+    assert sum(fires) <= 1

@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests: the paper's system-level claims at the
+paper's own scale (SimEngine, synthetic non-IID data)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import attacks, fedfits
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build(ARCHS["paper-mlp"])
+    fed, test = build_federation(0, kind="tabular", n=1500, n_clients=K,
+                                 batch_size=32, n_classes=22, n_features=22)
+
+    @jax.jit
+    def eval_fn(params):
+        l, m = model.loss(params, test)
+        return {"test_loss": l, "test_acc": m["acc"]}
+
+    return model, fed, eval_fn
+
+
+def _run(model, fed, eval_fn, algo, rounds=12, attack=False, **kw):
+    malicious = jnp.zeros((K,)).at[jnp.arange(2)].set(1.0) if attack else None
+
+    def data_attack(data, mal, rng):
+        return {"y": attacks.label_flip(data["y"], 22, mal)}
+
+    cfg = FedConfig(n_clients=K, algorithm=algo, local_epochs=2,
+                    local_lr=0.05, msl=4, pft=2, **kw)
+    state, hist = fedfits.run(
+        model, cfg, fed.data_fn, rounds, jax.random.PRNGKey(2),
+        eval_fn=eval_fn,
+        data_attack=data_attack if attack else None,
+        malicious=malicious)
+    return state, hist
+
+
+def test_fedfits_converges_normal_mode(setup):
+    model, fed, eval_fn = setup
+    state, hist = _run(model, fed, eval_fn, "fedfits")
+    assert hist[-1]["test_acc"] > 0.8, [h["test_acc"] for h in hist]
+
+
+def test_fedfits_beats_fedavg_under_attack(setup):
+    """The paper's headline claim (Tables III/V)."""
+    model, fed, eval_fn = setup
+    _, h_avg = _run(model, fed, eval_fn, "fedavg", attack=True)
+    _, h_fit = _run(model, fed, eval_fn, "fedfits", attack=True)
+    best_avg = max(h["test_acc"] for h in h_avg)
+    best_fit = max(h["test_acc"] for h in h_fit)
+    assert best_fit >= best_avg - 0.02, (best_fit, best_avg)
+    # and the team excludes poisoned clients most of the time
+    team_rounds = np.stack([h["team"] for h in h_fit[2:]])
+    mal_rate = team_rounds[:, :2].mean()
+    honest_rate = team_rounds[:, 2:].mean()
+    assert mal_rate < honest_rate
+
+
+def test_fedfits_cheaper_than_fedavg(setup):
+    """Slotted selection bills fewer client-rounds (paper: execution time)."""
+    model, fed, eval_fn = setup
+    s_avg, _ = _run(model, fed, eval_fn, "fedavg")
+    s_fit, _ = _run(model, fed, eval_fn, "fedfits")
+    assert float(s_fit.cost_client_rounds) < float(s_avg.cost_client_rounds)
+
+
+def test_baselines_run(setup):
+    model, fed, eval_fn = setup
+    for algo in ["fedrand", "fedpow"]:
+        _, hist = _run(model, fed, eval_fn, algo, rounds=6)
+        assert np.isfinite(hist[-1]["test_acc"])
+
+
+def test_dynamic_alpha_changes_over_rounds(setup):
+    model, fed, eval_fn = setup
+    _, hist = _run(model, fed, eval_fn, "fedfits", dynamic_alpha=True)
+    alphas = {round(float(h["alpha"]), 3) for h in hist}
+    assert len(alphas) >= 1  # defined every round
+    assert all(0.0 <= a <= 1.0 for a in alphas)
+
+
+def test_robust_aggregator_under_model_poison(setup):
+    model, fed, eval_fn = setup
+    malicious = jnp.zeros((K,)).at[jnp.arange(2)].set(1.0)
+
+    def update_attack(upd, mal, rng):
+        return attacks.sign_flip(upd, mal, scale=10.0)
+
+    cfg = FedConfig(n_clients=K, algorithm="fedfits", local_epochs=2,
+                    local_lr=0.05, aggregator="trimmed_mean")
+    state, hist = fedfits.run(model, cfg, fed.data_fn, 10,
+                              jax.random.PRNGKey(3), eval_fn=eval_fn,
+                              update_attack=update_attack,
+                              malicious=malicious)
+    assert hist[-1]["test_acc"] > 0.5, [h["test_acc"] for h in hist]
