@@ -1,11 +1,13 @@
 """Benchmark harness entry point — one bench per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; the kernels bench additionally
+writes BENCH_kernels.json (the perf-trajectory artifact CI records).
 
   PYTHONPATH=src python -m benchmarks.run [--budget small|full] [--only X]
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -33,7 +35,10 @@ def main() -> None:
         print(f"# ==== {name} ====", flush=True)
         try:
             mod = __import__(module, fromlist=["main"])
-            mod.main()
+            if "budget" in inspect.signature(mod.main).parameters:
+                mod.main(budget=args.budget)
+            else:
+                mod.main()
         except Exception:
             traceback.print_exc()
             failed.append(name)

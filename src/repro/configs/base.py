@@ -171,6 +171,9 @@ class FedConfig:
     aggregator: str = "fedavg"        # fedavg|median|trimmed_mean|krum
     trim_frac: float = 0.2            # trimmed-mean fraction per side
     krum_f: int = 1                   # assumed byzantine count for Krum
+    fused_agg: bool = True            # route Eq.-11 through the fused
+                                      # two-pass Pallas pipeline (False ->
+                                      # multi-pass XLA reference)
     paper_exact_agg: bool = False     # reproduce Algorithm 1's n_k/|S_t| literal
     # selection algorithm: fedfits|fedavg|fedrand|fedpow
     algorithm: str = "fedfits"

@@ -11,8 +11,14 @@ and weights (K,) already normalised by the caller.
 
 plus the trust machinery: EWMA trust decay and gradient-cosine outlier
 gating, and the two-stage slot-internal -> cross-slot combine.
-The Pallas kernel in kernels/robust_agg.py implements the same masked
-trimmed-mean/median contract for the TPU hot path; ref parity is tested.
+
+The full Eq.-11 pipeline (median reference -> cosine gate -> aggregator)
+runs by default through the fused two-pass Pallas engine in
+kernels/robust_pipeline.py (``aggregate``/``two_stage`` dispatch on
+cfg.fused_agg); the multi-pass XLA implementations here remain the
+parity oracles (``aggregate_ref``/``two_stage_ref``).  The standalone
+kernel in kernels/robust_agg.py keeps the bare masked trimmed-mean /
+median contract.
 """
 from __future__ import annotations
 
@@ -132,9 +138,12 @@ def update_trust(trust, scores, mask, decay):
     return jnp.where(mask > 0, upd, hold)
 
 
-def aggregate(updates, weights, mask, cfg):
-    """Dispatch on cfg.aggregator; applies the gradient-cosine outlier gate
-    first (robust pipeline of DESIGN.md §1 item 5).
+def aggregate_ref(updates, weights, mask, cfg):
+    """Multi-pass XLA reference for the Eq.-11 pipeline: applies the
+    gradient-cosine outlier gate first (robust pipeline of DESIGN.md §1
+    item 5), then the configured aggregator.  Kept as the parity oracle
+    for the fused Pallas engine (kernels/robust_pipeline.py), which
+    replaces these ~4 sort-based passes with 2 streaming passes.
 
     The gate's reference direction is the coordinate MEDIAN, not the mean:
     a mean reference is itself corruptible (large-magnitude poison flips
@@ -156,17 +165,40 @@ def aggregate(updates, weights, mask, cfg):
     raise ValueError(cfg.aggregator)
 
 
+def aggregate(updates, weights, mask, cfg):
+    """Dispatch on cfg.aggregator.  Routes through the fused two-pass
+    Pallas engine (kernels/robust_pipeline.py; interpret mode off-TPU)
+    unless cfg.fused_agg is False, in which case the multi-pass XLA
+    reference runs instead."""
+    if getattr(cfg, "fused_agg", True):
+        from repro.kernels.robust_pipeline import fused_aggregate_tree
+        return fused_aggregate_tree(updates, weights, mask, cfg)
+    return aggregate_ref(updates, weights, mask, cfg)
+
+
+def two_stage_ref(slot_updates, slot_weights, slot_masks, cfg):
+    """Cohort-batched reference for the two-stage scheme: ``aggregate_ref``
+    vmapped over the leading cohort axis (matching the fused kernel's
+    cohort-grid semantics — no serially-traced Python loop), then the
+    cross-slot size-weighted mean."""
+    per_cohort = jax.vmap(
+        lambda u, w, m: aggregate_ref(u, w, m, cfg)
+    )(slot_updates, slot_weights, slot_masks)
+    cw = slot_masks.sum(axis=1).astype(jnp.float32)
+    cw = cw / jnp.maximum(cw.sum(), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.tensordot(cw.astype(l.dtype), l, axes=(0, 0)),
+        per_cohort)
+
+
 def two_stage(slot_updates, slot_weights, slot_masks, cfg):
     """Slot-internal robust aggregation per cohort, then cross-slot mean —
     the paper's two-stage scheme; on the pod this is psum(data) then
-    psum(pod). Here: cohort-major pytrees (n_cohorts leading axis)."""
-    per_cohort = [
-        aggregate(jax.tree_util.tree_map(lambda l: l[i], slot_updates),
-                  slot_weights[i], slot_masks[i], cfg)
-        for i in range(slot_weights.shape[0])
-    ]
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_cohort)
-    cw = jnp.asarray([m.sum() for m in slot_masks], jnp.float32)
-    cw = cw / jnp.maximum(cw.sum(), 1e-12)
-    return jax.tree_util.tree_map(
-        lambda l: jnp.tensordot(cw.astype(l.dtype), l, axes=(0, 0)), stacked)
+    psum(pod). Here: cohort-major pytrees (n_cohorts leading axis).  All
+    cohorts ride the G grid axis of ONE fused ``pallas_call`` when
+    cfg.fused_agg (default); the vmapped XLA oracle runs otherwise."""
+    if getattr(cfg, "fused_agg", True):
+        from repro.kernels.robust_pipeline import fused_two_stage_tree
+        return fused_two_stage_tree(slot_updates, slot_weights, slot_masks,
+                                    cfg)
+    return two_stage_ref(slot_updates, slot_weights, slot_masks, cfg)

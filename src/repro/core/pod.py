@@ -14,8 +14,11 @@ Mapping:
     scalars carried in PodState — the entire round jits into one program.
 
 ``robust='per_client'`` materialises per-client grads (vmap) and runs the
-coordinate-robust aggregators; memory-feasible for <=20B models (see
-DESIGN.md §2) and used by the smoke tests.
+coordinate-robust aggregators — since the fused-pipeline PR this routes
+through the two-pass Pallas engine (kernels/robust_pipeline.py): the
+(C, N_params) grad matrix is streamed twice instead of sorted ~4 times.
+Memory-feasible for <=20B models (see DESIGN.md §2) and used by the
+smoke tests.
 """
 from __future__ import annotations
 

@@ -1,4 +1,8 @@
 """Pallas TPU kernels (validated in interpret mode on CPU):
-  flash_attention  sliding-window causal flash attention (long-context path)
-  robust_agg       masked trimmed-mean/median over the client axis
+  flash_attention   sliding-window causal flash attention (long-context path)
+  robust_agg        masked trimmed-mean/median over the client axis
+  robust_pipeline   fused two-pass Eq.-11 engine: median reference + cosine
+                    gate partials in one streaming pass, gated robust combine
+                    in a second, cohort axis on the grid, blocked pairwise
+                    distances for Krum — the core aggregation hot path
 """

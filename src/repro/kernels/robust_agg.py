@@ -27,21 +27,29 @@ from jax.experimental.pallas import tpu as pltpu
 _BIG = 1e30
 
 
-def _robust_body(n_ref, x_ref, mask_ref, o_ref, *, c, blk, mode, trim_frac):
-    x = x_ref[...].astype(jnp.float32)            # (C, blk)
-    m = mask_ref[...].astype(jnp.float32)         # (C, 1)
-    n = n_ref[0].astype(jnp.float32)              # selected count
-
-    xm = jnp.where(m > 0, x, _BIG)                # masked rows past everyone
-
-    # per-coordinate stable ranks: rank_i = #{j: x_j < x_i} + #{j<i: x_j == x_i}
+def stable_ranks(xm, c):
+    """Per-coordinate stable ranks of an already-masked (C, blk) block:
+    rank_i = #{j: x_j < x_i} + #{j<i: x_j == x_i}. Masked-out rows must
+    arrive pushed to +_BIG so they rank past every real row. O(C^2)
+    elementwise VPU ops — for C <= 64 this beats a data-dependent sort on
+    the TPU vector unit and keeps everything in registers/VMEM. Shared by
+    robust_agg and the fused robust_pipeline kernels."""
     xi = xm[:, None, :]                           # (C, 1, blk)
     xj = xm[None, :, :]                           # (1, C, blk)
     less = (xj < xi).astype(jnp.float32)
     row_i = jax.lax.broadcasted_iota(jnp.int32, (c, c, 1), 0)
     row_j = jax.lax.broadcasted_iota(jnp.int32, (c, c, 1), 1)
     tie = ((xj == xi) & (row_j < row_i)).astype(jnp.float32)
-    rank = (less + tie).sum(axis=1)               # (C, blk)
+    return (less + tie).sum(axis=1)               # (C, blk)
+
+
+def _robust_body(n_ref, x_ref, mask_ref, o_ref, *, c, blk, mode, trim_frac):
+    x = x_ref[...].astype(jnp.float32)            # (C, blk)
+    m = mask_ref[...].astype(jnp.float32)         # (C, 1)
+    n = n_ref[0].astype(jnp.float32)              # selected count
+
+    xm = jnp.where(m > 0, x, _BIG)                # masked rows past everyone
+    rank = stable_ranks(xm, c)                    # (C, blk)
 
     if mode == "trimmed":
         t = jnp.floor(trim_frac * n)

@@ -1,0 +1,367 @@
+"""Fused two-pass robust-aggregation pipeline — Pallas TPU engine.
+
+The trust-aware robust aggregation of paper Eq. 11 (median reference ->
+gradient-cosine outlier gate -> trimmed-mean / median / weighted-mean /
+Krum) as TWO streaming passes over the (G, C, N) cohort-batched client
+update matrix, instead of the ~4+ independent sort-based XLA passes of
+the reference path in ``core/aggregation.py``:
+
+  pass 1   streams (C, blk) blocks once.  Per block it computes the
+           coordinate-median reference with the O(C^2) stable-rank
+           network (shared with kernels/robust_agg.py) AND accumulates
+           the per-client cosine partials — dot(x_i, ref), ||x_i||^2,
+           ||ref||^2 — into (C,) VMEM accumulators that live across the
+           whole N sweep (init at block 0, revisited every block).  The
+           median itself stays in VMEM: only the O(C) partials reach HBM.
+
+  gate     resolved on-device between the passes from the (G, C)
+           accumulators: O(G*C) jnp scalars, no host round-trip, no
+           re-read of the update matrix.
+
+  pass 2   streams the blocks once more, applying the gated mask (and
+           the caller's trust weights for the mean modes) to emit the
+           final aggregated row: trimmed mean / median via the rank
+           network, or the normalised weighted mean.
+
+  krum     an extra blocked pairwise-distance kernel accumulates the
+           (C, C) Gram matrix in one more streaming pass; the O(C^2)
+           Krum scoring runs on-device in jnp and the winners are
+           averaged by pass 2 in ``mean`` mode.
+
+The leading G (cohort) grid axis batches every slot of the two-stage
+scheme in ONE ``pallas_call`` — the reference's per-cohort Python loop
+becomes a grid dimension.
+
+HBM traffic: the reference path reads (and for sorts, re-writes) the
+(C, N) matrix >= 4 times; the fused pipeline reads it exactly twice
+(three times for Krum) and writes only the (1, N) output.  See
+``benchmarks/bench_kernels.py::robust_pipeline_roofline``.  Caveat: the
+pytree wrappers below flatten multi-leaf trees with one concatenate
+(plus a pad when N % blk != 0), which materialises an extra (C, N)
+copy before the kernel — streaming the passes leaf-wise to avoid that
+copy is a ROADMAP follow-up.
+
+Layout note: the (C,)-shaped accumulators use C as the minor dimension;
+on real TPUs C < 128 relies on Mosaic's small-array padding.  The pipeline
+is validated in interpret mode on CPU (the repo's test substrate); ``blk``
+should be large there so the grid stays short.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.robust_agg import _BIG, stable_ranks
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# pass 1: median reference + cosine-gate partials
+# ---------------------------------------------------------------------------
+
+def _pass1_body(n_ref, x_ref, mask_ref, dot_ref, sqn_ref, refsq_ref, *, c):
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[0].astype(jnp.float32)              # (C, blk)
+    m = mask_ref[0].astype(jnp.float32)           # (C, 1)
+    n = n_ref[g].astype(jnp.float32)
+
+    xm = jnp.where(m > 0, x, _BIG)
+    rank = stable_ranks(xm, c)                    # (C, blk)
+    lo = jnp.floor((n - 1.0) / 2.0)
+    hi = jnp.ceil((n - 1.0) / 2.0)
+    pick_lo = (rank == lo).astype(jnp.float32) * m
+    pick_hi = (rank == hi).astype(jnp.float32) * m
+    # median reference lives only in VMEM: consumed by the partials below,
+    # never written to HBM (pass 2 recomputes it from the rank network)
+    med = 0.5 * ((x * pick_lo).sum(axis=0, keepdims=True)
+                 + (x * pick_hi).sum(axis=0, keepdims=True))   # (1, blk)
+
+    @pl.when(i == 0)
+    def _init():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        sqn_ref[...] = jnp.zeros_like(sqn_ref)
+        refsq_ref[...] = jnp.zeros_like(refsq_ref)
+
+    dot_ref[...] += (x * med).sum(axis=1)[None, :]
+    sqn_ref[...] += (x * x).sum(axis=1)[None, :]
+    refsq_ref[...] += (med * med).sum(axis=1, keepdims=True)
+
+
+def cosine_gate_partials(x, mask, *, blk=4096, interpret=False):
+    """x: (G, C, N) f32, mask: (G, C) 0/1 ->
+    (dots (G, C), sqnorms (G, C), refsq (G, 1)) — the per-client cosine
+    partials vs the coordinate-median reference, in one streaming read."""
+    G, C, N = x.shape
+    assert N % blk == 0, (N, blk)
+    n_sel = mask.sum(axis=1).astype(jnp.float32)  # (G,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, N // blk),
+        in_specs=[
+            pl.BlockSpec((1, C, blk), lambda g, i, n: (g, 0, i)),
+            pl.BlockSpec((1, C, 1), lambda g, i, n: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C), lambda g, i, n: (g, 0)),
+            pl.BlockSpec((1, C), lambda g, i, n: (g, 0)),
+            pl.BlockSpec((1, 1), lambda g, i, n: (g, 0)),
+        ],
+    )
+    dots, sqn, refsq = pl.pallas_call(
+        functools.partial(_pass1_body, c=C),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((G, C), jnp.float32),
+            jax.ShapeDtypeStruct((G, C), jnp.float32),
+            jax.ShapeDtypeStruct((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_sel, x, mask.reshape(G, C, 1))
+    return dots, sqn, refsq
+
+
+# ---------------------------------------------------------------------------
+# pass 2: gated robust combine
+# ---------------------------------------------------------------------------
+
+def _pass2_body(n_ref, x_ref, m_ref, w_ref, o_ref, *, c, mode, trim_frac):
+    g = pl.program_id(0)
+    x = x_ref[0].astype(jnp.float32)              # (C, blk)
+    m = m_ref[0].astype(jnp.float32)              # (C, 1)
+
+    if mode == "mean":
+        w = w_ref[0].astype(jnp.float32)          # (C, 1) pre-normalised
+        o_ref[0] = (x * w).sum(axis=0, keepdims=True).astype(o_ref.dtype)
+        return
+
+    n = n_ref[g].astype(jnp.float32)
+    xm = jnp.where(m > 0, x, _BIG)
+    rank = stable_ranks(xm, c)
+    if mode == "trimmed":
+        t = jnp.floor(trim_frac * n)
+        keep = ((rank >= t) & (rank < n - t)).astype(jnp.float32) * m
+        cnt = jnp.maximum(n - 2.0 * t, 1.0)
+        o_ref[0] = ((x * keep).sum(axis=0, keepdims=True) / cnt
+                    ).astype(o_ref.dtype)
+    else:                                          # median
+        lo = jnp.floor((n - 1.0) / 2.0)
+        hi = jnp.ceil((n - 1.0) / 2.0)
+        pick_lo = (rank == lo).astype(jnp.float32) * m
+        pick_hi = (rank == hi).astype(jnp.float32) * m
+        o_ref[0] = (0.5 * ((x * pick_lo).sum(axis=0, keepdims=True)
+                           + (x * pick_hi).sum(axis=0, keepdims=True))
+                    ).astype(o_ref.dtype)
+
+
+def gated_combine(x, gated_mask, weights, *, mode, trim_frac=0.2, blk=4096,
+                  interpret=False):
+    """x: (G, C, N); gated_mask: (G, C); weights: (G, C) (normalised,
+    ``mean`` mode only) -> (G, N)."""
+    G, C, N = x.shape
+    assert N % blk == 0, (N, blk)
+    n_sel = gated_mask.sum(axis=1).astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, N // blk),
+        in_specs=[
+            pl.BlockSpec((1, C, blk), lambda g, i, n: (g, 0, i)),
+            pl.BlockSpec((1, C, 1), lambda g, i, n: (g, 0, 0)),
+            pl.BlockSpec((1, C, 1), lambda g, i, n: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk), lambda g, i, n: (g, 0, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_pass2_body, c=C, mode=mode, trim_frac=trim_frac),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, 1, N), jnp.float32),
+        interpret=interpret,
+    )(n_sel, x, gated_mask.reshape(G, C, 1), weights.reshape(G, C, 1))
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# blocked pairwise distances (Krum)
+# ---------------------------------------------------------------------------
+
+def _pairwise_body(x_ref, gram_ref, sqn_ref, *, c):
+    i = pl.program_id(1)
+    x = x_ref[0].astype(jnp.float32)              # (C, blk)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        sqn_ref[...] = jnp.zeros_like(sqn_ref)
+
+    gram_ref[0] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    sqn_ref[...] += (x * x).sum(axis=1)[None, :]
+
+
+def pairwise_sq_dists_blocked(x, mask, *, blk=4096, interpret=False):
+    """Blocked (G, C, C) squared distances: streams N once, accumulating
+    the Gram matrix and row norms; masked-out pairs pushed to +_BIG (same
+    contract as ``aggregation.pairwise_sq_dists``)."""
+    G, C, N = x.shape
+    assert N % blk == 0, (N, blk)
+    gram, sqn = pl.pallas_call(
+        functools.partial(_pairwise_body, c=C),
+        grid=(G, N // blk),
+        in_specs=[pl.BlockSpec((1, C, blk), lambda g, i: (g, 0, i))],
+        out_specs=[
+            pl.BlockSpec((1, C, C), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, C), lambda g, i: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, C, C), jnp.float32),
+            jax.ShapeDtypeStruct((G, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    d = sqn[:, :, None] + sqn[:, None, :] - 2.0 * gram
+    big = _BIG * (1.0 - mask[:, :, None] * mask[:, None, :])
+    return jnp.maximum(d, 0.0) + big
+
+
+def _krum_weights(d, mask, f, multi_m):
+    """Krum selection weights from (G, C, C) distances; mirrors
+    ``aggregation.krum`` (scores = sum of n-f-2 smallest distances,
+    multi_m best averaged)."""
+    G, C, _ = d.shape
+    d = d + _BIG * jnp.eye(C)[None]               # exclude self
+    n = mask.sum(axis=1, keepdims=True)           # (G, 1)
+    closest = jnp.sort(d, axis=2)
+    j = jnp.arange(C, dtype=jnp.float32)[None, None, :]
+    take = jnp.maximum(n - f - 2, 1.0)[:, :, None]
+    scores = jnp.where(j < take, closest, 0.0).sum(axis=2)    # (G, C)
+    scores = jnp.where(mask > 0, scores, _BIG)
+    pos = jnp.argsort(jnp.argsort(scores, axis=1), axis=1)
+    sel = (pos < multi_m).astype(jnp.float32)
+    return sel / jnp.maximum(sel.sum(axis=1, keepdims=True), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# the fused pipeline
+# ---------------------------------------------------------------------------
+
+def fused_pipeline(x, weights, mask, *, aggregator="trimmed_mean",
+                   trim_frac=0.2, cosine_thresh=-0.5, krum_f=1,
+                   krum_multi_m=1, blk=4096, interpret=None):
+    """Full Eq.-11 pipeline over a cohort batch.
+
+    x: (G, C, N) f32 flattened client updates; weights, mask: (G, C).
+    Returns the (G, N) aggregated rows.  Semantically equivalent to
+    ``aggregation.aggregate_ref`` vmapped over G (parity-tested)."""
+    G, C, N = x.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    blk = min(blk, max(128, N))
+    pad = (-N) % blk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+    x = x.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    # ---- pass 1: median reference + cosine partials (1 read of x) ----
+    dots, sqn, refsq = cosine_gate_partials(
+        x, mask, blk=blk, interpret=interpret)
+
+    # ---- on-device gate resolution: O(G*C) scalars ----
+    cos = dots / jnp.maximum(jnp.sqrt(sqn * refsq), 1e-12)
+    gate = ((cos >= cosine_thresh) & (mask > 0)).astype(jnp.float32)
+    m = mask * gate
+    m = jnp.where(m.sum(axis=1, keepdims=True) > 0, m, mask)  # never empty
+
+    # ---- pass 2 (+ Krum distance pass): gated combine ----
+    if aggregator == "fedavg":
+        w = weights * m
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+        out = gated_combine(x, m, w, mode="mean", blk=blk,
+                            interpret=interpret)
+    elif aggregator == "trimmed_mean":
+        out = gated_combine(x, m, m, mode="trimmed", trim_frac=trim_frac,
+                            blk=blk, interpret=interpret)
+    elif aggregator == "median":
+        out = gated_combine(x, m, m, mode="median", blk=blk,
+                            interpret=interpret)
+    elif aggregator == "krum":
+        d = pairwise_sq_dists_blocked(x, m, blk=blk, interpret=interpret)
+        w = _krum_weights(d, m, krum_f, krum_multi_m)
+        out = gated_combine(x, m, w, mode="mean", blk=blk,
+                            interpret=interpret)
+    else:
+        raise ValueError(aggregator)
+    return out[:, :N] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# pytree wrappers (the core/aggregation.py hot path)
+# ---------------------------------------------------------------------------
+
+def _flatten_cohorts(updates, lead):
+    """Flatten a pytree of (*lead, ...) leaves into one (*lead, N) f32
+    matrix; returns (flat, treedef, leaves, sizes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(updates)
+    sizes = [int(l.size // max(1, _prod(l.shape[:lead]))) for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(*l.shape[:lead], -1).astype(jnp.float32) for l in leaves],
+        axis=-1)
+    return flat, treedef, leaves, sizes
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def _unflatten(agg, treedef, leaves, sizes, lead):
+    out, off = [], 0
+    for l, n in zip(leaves, sizes):
+        out.append(agg[..., off:off + n].reshape(l.shape[lead:]).astype(
+            l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "blk", "interpret"))
+def fused_aggregate_tree(updates, weights, mask, cfg, *, blk=4096,
+                         interpret=None):
+    """Single-cohort Eq.-11 aggregation over a pytree of (C, ...) leaves;
+    drop-in for ``aggregation.aggregate_ref`` (which stays as the parity
+    oracle)."""
+    flat, treedef, leaves, sizes = _flatten_cohorts(updates, 1)
+    out = fused_pipeline(
+        flat[None], weights[None], mask[None],
+        aggregator=cfg.aggregator, trim_frac=cfg.trim_frac,
+        cosine_thresh=cfg.cosine_outlier_thresh, krum_f=cfg.krum_f,
+        blk=blk, interpret=interpret)[0]
+    return _unflatten(out, treedef, leaves, sizes, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "blk", "interpret"))
+def fused_two_stage_tree(slot_updates, slot_weights, slot_masks, cfg, *,
+                         blk=4096, interpret=None):
+    """Cohort-batched two-stage scheme: every slot rides the G grid axis of
+    ONE fused pipeline call (the reference's per-cohort Python loop becomes
+    a grid dimension), then the cross-slot size-weighted mean."""
+    flat, treedef, leaves, sizes = _flatten_cohorts(slot_updates, 2)
+    per = fused_pipeline(
+        flat, slot_weights, slot_masks,
+        aggregator=cfg.aggregator, trim_frac=cfg.trim_frac,
+        cosine_thresh=cfg.cosine_outlier_thresh, krum_f=cfg.krum_f,
+        blk=blk, interpret=interpret)                      # (G, N)
+    cw = slot_masks.sum(axis=1).astype(jnp.float32)
+    cw = cw / jnp.maximum(cw.sum(), 1e-12)
+    combined = jnp.tensordot(cw, per, axes=(0, 0))         # (N,)
+    return _unflatten(combined, treedef, leaves, sizes, 2)
