@@ -5,6 +5,11 @@ roofline (FLOPs, bytes, arithmetic intensity per VMEM tile).
 ``robust_pipeline`` compares the fused two-pass Pallas Eq.-11 engine
 (kernels/robust_pipeline.py) against the multi-pass XLA reference
 (aggregation.aggregate_ref) and accounts HBM passes analytically.
+``robust_pipeline/leafwise`` times the segment-table leaf-streaming
+engine against the PR-1 flatten path on a multi-leaf tree, and
+``robust_pipeline/sharded`` the shard_map'd per-client path against the
+replicated one on however many devices exist (the CI multi-device job
+forces 4 host devices), recording the parity gap vs the XLA oracle.
 Results are also dumped to BENCH_kernels.json (the perf trajectory
 artifact CI uploads every run).
 """
@@ -23,7 +28,8 @@ from repro.configs.base import HBM_BW, PEAK_FLOPS_BF16, FedConfig
 from repro.core import aggregation
 from repro.kernels.flash_attention_ops import flash_attention
 from repro.kernels.robust_agg_ops import robust_aggregate_tree
-from repro.kernels.robust_pipeline import fused_aggregate_tree
+from repro.kernels.robust_pipeline import (fused_aggregate_tree,
+                                           fused_aggregate_tree_flat)
 
 BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
 
@@ -71,10 +77,10 @@ def robust_pipeline_roofline(C, N, aggregator):
       pass 2  read (gated combine)                     1 pass
       krum    +1 blocked pairwise-distance read        1 pass
 
-    This accounts the kernel contract (one pre-flattened (C, N) matrix,
-    as benchmarked here).  The pytree wrappers add ~2 passes (read +
-    write) of flatten-concatenate for multi-leaf trees — see the
-    robust_pipeline module docstring and the ROADMAP follow-up.
+    The leaf-streaming wrappers hit this kernel-contract roofline
+    end-to-end (a reshape view per leaf, no copy); the PR-1 flatten path
+    adds ~2 passes (concatenate write + re-read) for multi-leaf trees,
+    accounted by ``hbm_passes_flatten`` in the leafwise entries.
     """
     ref = {"fedavg": 4.0, "median": 6.0, "trimmed_mean": 6.0, "krum": 5.0}
     fused = {"fedavg": 2.0, "median": 2.0, "trimmed_mean": 2.0, "krum": 3.0}
@@ -144,13 +150,86 @@ def run(budget="small"):
              "wall_s_ref": t_ref, "speedup_vs_ref": t_ref / t_fused}
         r.update(robust_pipeline_roofline(C, N, agg))
         out.append(r)
+
+    # ---- leaf-streaming (segment-table) engine vs the PR-1 flatten path
+    # multi-leaf tree totalling N=65536 coords: matrix-shaped leaves plus
+    # a ragged one and a tiny bias (the shapes that forced the flatten
+    # path's (C, N) concatenate + unflatten copies)
+    sizes = [(1 << 14,), (128, 128), (64, 256), (16_000,), (379,), (5,)]
+    ltree = {f"l{j}": jax.random.normal(jax.random.fold_in(key, j),
+                                       (C,) + s)
+             for j, s in enumerate(sizes)}
+    n_tot = sum(int(jnp.prod(jnp.asarray(s))) for s in sizes)
+    for agg in aggs:
+        cfg = FedConfig(n_clients=C, aggregator=agg)
+        t_flat, t_leaf = float("inf"), float("inf")
+        for _ in range(7):                         # interleaved (see above)
+            # flatten baseline runs at blk=4096 — the default the PR-1
+            # aggregate() hot path actually shipped with
+            t_flat = min(t_flat, _time(
+                lambda: fused_aggregate_tree_flat(ltree, pw, pmask, cfg,
+                                                  blk=4096), reps=1))
+            t_leaf = min(t_leaf, _time(
+                lambda: fused_aggregate_tree(ltree, pw, pmask, cfg),
+                reps=1))
+        r = {"name": f"robust_pipeline/leafwise/{agg}/C{C}/N{n_tot}",
+             "wall_s": t_leaf, "wall_s_flatten": t_flat,
+             "flatten_blk": 4096,
+             "speedup_vs_flatten": t_flat / t_leaf}
+        roof = robust_pipeline_roofline(C, n_tot, agg)
+        r.update(roof)
+        # flatten adds one concatenate write + one re-read of (C, N)
+        r["hbm_passes_flatten"] = roof["hbm_passes_fused"] + 2.0
+        out.append(r)
+
+    # ---- mesh-sharded per_client path vs replicated, on whatever devices
+    # exist (CI forces 4 host CPU devices); parity vs the XLA oracle
+    from jax.sharding import Mesh
+    import numpy as np
+    D = jax.device_count()
+    mesh = Mesh(np.array(jax.devices()).reshape(D), ("data",))
+    for agg in aggs:
+        cfg = FedConfig(n_clients=C, aggregator=agg)
+        sh_fn = jax.jit(lambda t, w, m, cfg=cfg: aggregation.aggregate_sharded(
+            t, w, m, cfg, mesh, axes=("data",)))
+        t_sh, t_rep = float("inf"), float("inf")
+        for _ in range(5):
+            t_rep = min(t_rep, _time(
+                lambda: fused_aggregate_tree(ltree, pw, pmask, cfg),
+                reps=1))
+            t_sh = min(t_sh, _time(lambda: sh_fn(ltree, pw, pmask), reps=1))
+        ref = aggregation.aggregate_ref(ltree, pw, pmask, cfg)
+        got = sh_fn(ltree, pw, pmask)
+        parity = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+                     for a, b in zip(jax.tree_util.tree_leaves(got),
+                                     jax.tree_util.tree_leaves(ref)))
+        roof = robust_pipeline_roofline(C, n_tot, agg)
+        out.append({
+            "name": f"robust_pipeline/sharded/{agg}/C{C}/N{n_tot}/dev{D}",
+            "wall_s": t_sh, "wall_s_replicated": t_rep,
+            "speedup_vs_replicated": t_rep / t_sh,
+            "devices": D, "parity_max_abs_diff": parity,
+            "parity_ok_1e-5": bool(parity <= 1e-5),
+            # each device streams 1/D of the matrix in both passes
+            "bytes_per_device": roof["bytes_fused"] / D,
+            "hbm_passes_fused": roof["hbm_passes_fused"],
+        })
     return out
 
 
 def main(budget="small"):
     results = run(budget)
     for r in results:
-        if "speedup_vs_ref" in r:
+        if "speedup_vs_flatten" in r:
+            extra = (f"speedup_vs_flatten={r['speedup_vs_flatten']:.2f}x "
+                     f"hbm_passes={r['hbm_passes_fused']:.0f}"
+                     f"/{r['hbm_passes_flatten']:.0f}")
+        elif "speedup_vs_replicated" in r:
+            extra = (f"speedup_vs_replicated="
+                     f"{r['speedup_vs_replicated']:.2f}x dev={r['devices']} "
+                     f"parity={r['parity_max_abs_diff']:.1e}")
+        elif "speedup_vs_ref" in r:
             extra = (f"speedup={r['speedup_vs_ref']:.2f}x "
                      f"hbm_passes={r['hbm_passes_fused']:.0f}"
                      f"/{r['hbm_passes_ref']:.0f}")

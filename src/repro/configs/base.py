@@ -174,6 +174,9 @@ class FedConfig:
     fused_agg: bool = True            # route Eq.-11 through the fused
                                       # two-pass Pallas pipeline (False ->
                                       # multi-pass XLA reference)
+    agg_blk: Optional[int] = None     # fused-pipeline streaming block size;
+                                      # None -> autotuned from backend +
+                                      # VMEM budget (robust_pipeline.auto_blk)
     paper_exact_agg: bool = False     # reproduce Algorithm 1's n_k/|S_t| literal
     # selection algorithm: fedfits|fedavg|fedrand|fedpow
     algorithm: str = "fedfits"

@@ -16,9 +16,14 @@ The full Eq.-11 pipeline (median reference -> cosine gate -> aggregator)
 runs by default through the fused two-pass Pallas engine in
 kernels/robust_pipeline.py (``aggregate``/``two_stage`` dispatch on
 cfg.fused_agg); the multi-pass XLA implementations here remain the
-parity oracles (``aggregate_ref``/``two_stage_ref``).  The standalone
-kernel in kernels/robust_agg.py keeps the bare masked trimmed-mean /
-median contract.
+parity oracles (``aggregate_ref``/``two_stage_ref``).  The engine
+streams pytrees leaf-wise (segment-table grid, no flatten concatenate)
+with the block size autotuned unless cfg.agg_blk pins it.  On a mesh,
+``aggregate_sharded`` runs the same pipeline with the flattened param
+axis sharded over devices (shard_map): both passes stream shard-locally
+and only the (C,) cosine partials / Krum Gram matrix cross devices in
+one psum.  The standalone kernel in kernels/robust_agg.py keeps the
+bare masked trimmed-mean / median contract.
 """
 from __future__ import annotations
 
@@ -172,8 +177,60 @@ def aggregate(updates, weights, mask, cfg):
     reference runs instead."""
     if getattr(cfg, "fused_agg", True):
         from repro.kernels.robust_pipeline import fused_aggregate_tree
-        return fused_aggregate_tree(updates, weights, mask, cfg)
+        return fused_aggregate_tree(updates, weights, mask, cfg,
+                                    blk=getattr(cfg, "agg_blk", None))
     return aggregate_ref(updates, weights, mask, cfg)
+
+
+def aggregate_sharded(updates, weights, mask, cfg, mesh, axes=None):
+    """Mesh-sharded Eq.-11 aggregation over a pytree of (C, ...) leaves.
+
+    Each leaf's flattened parameter axis is sharded over the ``axes``
+    mesh axes (default: every axis except "pod"), so every device streams
+    only its shard through both fused passes; only the (C,) cosine
+    partials — and Krum's (C, C) Gram matrix — cross devices, in one
+    psum.  Leaves whose size does not divide the axis extent stay
+    replicated; a 0/1 per-leaf scale keeps them from being double-counted
+    in the psum.  Semantically equivalent to ``aggregate`` (parity atol
+    ~1e-5 from the shard-local summation order)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import robust_pipeline as rp
+    from repro.sharding import specs as sh
+
+    if axes is None:
+        axes = tuple(a for a in mesh.axis_names if a != "pod")
+    axes = tuple(axes)
+    leaves, treedef = jax.tree_util.tree_flatten(updates)
+    C = leaves[0].shape[0]
+    flat = [l.reshape(1, C, -1) for l in leaves]          # views, no copy
+    in_specs, shard_flags = sh.client_flat_specs(
+        [f.shape[-1] for f in flat], mesh, axes)
+    out_specs = tuple(P(None, axes) if f else P(None, None)
+                      for f in shard_flags)
+
+    def agg(w, m, *fl):
+        own = jnp.float32(1.0)
+        for a in axes:                                    # linear-index == 0
+            own = own * (jax.lax.axis_index(a) == 0).astype(jnp.float32)
+        scale = jnp.stack([jnp.float32(1.0) if f else own
+                           for f in shard_flags])
+        outs = rp.fused_pipeline_leafwise(
+            list(fl), w[None], m[None],
+            aggregator=cfg.aggregator, trim_frac=cfg.trim_frac,
+            cosine_thresh=cfg.cosine_outlier_thresh, krum_f=cfg.krum_f,
+            blk=getattr(cfg, "agg_blk", None),
+            axis_name=axes, leaf_scale=scale,
+            out_dtypes=[l.dtype for l in leaves])
+        return tuple(outs)
+
+    wrapped = shard_map(agg, mesh=mesh,
+                        in_specs=(P(None), P(None)) + tuple(in_specs),
+                        out_specs=out_specs, check_rep=False)
+    outs = wrapped(weights, mask, *flat)
+    outs = [o.reshape(l.shape[1:]) for o, l in zip(outs, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, outs)
 
 
 def two_stage_ref(slot_updates, slot_weights, slot_masks, cfg):
@@ -200,5 +257,5 @@ def two_stage(slot_updates, slot_weights, slot_masks, cfg):
     if getattr(cfg, "fused_agg", True):
         from repro.kernels.robust_pipeline import fused_two_stage_tree
         return fused_two_stage_tree(slot_updates, slot_weights, slot_masks,
-                                    cfg)
+                                    cfg, blk=getattr(cfg, "agg_blk", None))
     return two_stage_ref(slot_updates, slot_weights, slot_masks, cfg)

@@ -14,11 +14,16 @@ Mapping:
     scalars carried in PodState — the entire round jits into one program.
 
 ``robust='per_client'`` materialises per-client grads (vmap) and runs the
-coordinate-robust aggregators — since the fused-pipeline PR this routes
-through the two-pass Pallas engine (kernels/robust_pipeline.py): the
-(C, N_params) grad matrix is streamed twice instead of sorted ~4 times.
-Memory-feasible for <=20B models (see DESIGN.md §2) and used by the
-smoke tests.
+coordinate-robust aggregators through the two-pass Pallas engine
+(kernels/robust_pipeline.py): each (C, n_leaf) grad leaf is streamed
+twice instead of sorted ~4 times, leaf-wise (segment-table grid — no
+(C, N_params) flatten concatenate).  With ``agg_mesh`` the flattened
+param axis additionally shards over the mesh
+(aggregation.aggregate_sharded): every device streams only its shard in
+both passes and only the (C,) cosine partials (+ Krum's Gram matrix)
+cross devices in one psum, so per-device HBM traffic drops by the mesh
+size instead of replicating the whole grad matrix.  Memory-feasible for
+<=20B models (see DESIGN.md §2) and used by the smoke tests.
 """
 from __future__ import annotations
 
@@ -100,7 +105,8 @@ def per_client_metrics(params, cfg, batch, C):
 
 
 def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
-                    eval_frac=4, zero1_shardings=None):
+                    eval_frac=4, zero1_shardings=None, agg_mesh=None,
+                    agg_axes=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch: {tokens (GB, S), targets (GB, S), [embeds/image_embeds]}.
@@ -112,6 +118,12 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
     reduce-scattered back to the fully-sharded fp32 master + optimizer
     state. Baseline (None) keeps fp32 FSDPxTP weights in the matmuls and
     lets GSPMD pick the collectives.
+
+    agg_mesh / agg_axes: with robust='per_client', shard the robust
+    aggregation's flattened param axis over these mesh axes (default:
+    every axis but "pod") via aggregation.aggregate_sharded — both fused
+    passes then stream shard-locally instead of replicating the whole
+    (C, N_params) grad matrix on every device.
     """
     C = fed_cfg.n_clients
     opt_init, opt_update = optimizers.make_optimizer(train_cfg)
@@ -176,7 +188,11 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
                 return g, l, m["acc"]
 
             grads_c, loss_c, acc_c = jax.vmap(client_grad)(jnp.arange(C))
-            grads = aggregation.aggregate(grads_c, w, fed.team, fed_cfg)
+            if agg_mesh is not None and getattr(fed_cfg, "fused_agg", True):
+                grads = aggregation.aggregate_sharded(
+                    grads_c, w, fed.team, fed_cfg, agg_mesh, axes=agg_axes)
+            else:
+                grads = aggregation.aggregate(grads_c, w, fed.team, fed_cfg)
         else:
             (_, (loss_c, acc_c)), grads = jax.value_and_grad(
                 weighted_loss, has_aux=True)(state.params, batch, w)

@@ -4,5 +4,8 @@
   robust_pipeline   fused two-pass Eq.-11 engine: median reference + cosine
                     gate partials in one streaming pass, gated robust combine
                     in a second, cohort axis on the grid, blocked pairwise
-                    distances for Krum — the core aggregation hot path
+                    distances for Krum — the core aggregation hot path.
+                    Streams pytrees leaf-wise (segment-table grid, no flatten
+                    concatenate) and shard-locally under shard_map (psum'd
+                    partials); block size autotuned per backend
 """

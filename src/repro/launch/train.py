@@ -66,6 +66,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced arch variant")
+    ap.add_argument("--robust", default=None, choices=[None, "per_client"],
+                    help="per_client: coordinate-robust aggregation over "
+                         "per-client grads, mesh-sharded along the "
+                         "flattened param axis")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -84,9 +88,13 @@ def main():
 
     state_sh = sh.named(mesh, sh.param_specs(state, mesh=mesh))
     state = jax.device_put(state, state_sh)
-    step_fn = jax.jit(pod.make_train_step(cfg, fed, tc),
+    # donate the carry: params/opt-state update in place, no per-step copy
+    step_fn = jax.jit(pod.make_train_step(cfg, fed, tc, robust=args.robust,
+                                          agg_mesh=mesh if args.robust
+                                          else None),
                       in_shardings=(state_sh, None),
-                      out_shardings=(state_sh, None))
+                      out_shardings=(state_sh, None),
+                      donate_argnums=(0,))
 
     start = 0
     if args.ckpt_dir:
@@ -96,10 +104,13 @@ def main():
             print(f"restored checkpoint at step {at}")
 
     sampler = synthetic_lm_batches(cfg, tc, fed.n_clients, tc.seed)
+    # the donated carry aliases `key` (PodFedState.rng) and deletes its
+    # buffer on the first step; sample from a live copy
+    sample_key = jnp.array(np.asarray(key))
     t0 = time.time()
     with mesh:
         for step in range(start, args.steps):
-            batch = sampler(jax.random.fold_in(key, step))
+            batch = sampler(jax.random.fold_in(sample_key, step))
             state, metrics = step_fn(state, batch)
             if step % 5 == 0 or step == args.steps - 1:
                 m = {k: round(float(v), 4) for k, v in metrics.items()}

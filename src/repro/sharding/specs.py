@@ -209,6 +209,27 @@ def cache_specs(cache: Any, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(spec_for, cache)
 
 
+def client_flat_specs(sizes, mesh, axes=("data", "model")):
+    """PartitionSpecs for the (1, C, n_l)-flattened per-client update
+    leaves of the sharded robust-aggregation path
+    (``aggregation.aggregate_sharded``): the flattened param axis shards
+    over ``axes`` when its size divides the combined axis extent, else the
+    leaf stays replicated (small norm/bias leaves — the fused pipeline
+    de-duplicates them before its psum).  Returns (specs, sharded_flags).
+    """
+    axes = tuple(axes)
+    size = _axis_size(mesh, axes)
+    specs, flags = [], []
+    for n in sizes:
+        if n >= size and n % size == 0:
+            specs.append(P(None, None, axes))
+            flags.append(True)
+        else:
+            specs.append(P(None, None, None))
+            flags.append(False)
+    return tuple(specs), tuple(flags)
+
+
 def _dp_axes(mesh):
     names = mesh.axis_names
     return ("pod", "data") if "pod" in names else ("data",)

@@ -1,5 +1,7 @@
 """Fused two-pass robust-aggregation pipeline (kernels/robust_pipeline.py)
-vs the multi-pass XLA oracles, plus the scan round-driver equivalence."""
+vs the multi-pass XLA oracles — leaf-streaming (segment-table) engine,
+the PR-1 flatten baseline, dtype round-trips, and the jaxpr no-copy
+guarantee — plus the scan round-driver equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +9,11 @@ import pytest
 
 from repro.configs.base import FedConfig
 from repro.core import aggregation
-from repro.kernels.robust_pipeline import (fused_aggregate_tree,
+from repro.kernels.robust_pipeline import (auto_blk, fused_aggregate_tree,
+                                           fused_aggregate_tree_flat,
                                            fused_two_stage_tree,
+                                           fused_two_stage_tree_flat,
+                                           make_segments,
                                            pairwise_sq_dists_blocked)
 
 KEY = jax.random.PRNGKey(0)
@@ -73,6 +78,20 @@ def test_two_stage_cohort_batched_matches_ref(agg):
     _assert_tree_close(out, ref)
 
 
+def test_two_stage_leafwise_matches_flat():
+    """Cohort-batched leaf-streaming vs the PR-1 flatten path (kept as
+    oracle): same G-grid semantics, no concatenate."""
+    g, k = 3, 8
+    upd = {"w": jax.random.normal(KEY, (g, k, 57)),
+           "b": jax.random.normal(jax.random.fold_in(KEY, 3), (g, k, 5, 3))}
+    sw = jax.random.uniform(jax.random.fold_in(KEY, 4), (g, k)) + 0.1
+    sm = jnp.ones((g, k)).at[1, 2].set(0.0)
+    cfg = FedConfig(aggregator="trimmed_mean")
+    out = fused_two_stage_tree(upd, sw, sm, cfg, blk=128)
+    ref = fused_two_stage_tree_flat(upd, sw, sm, cfg, blk=128)
+    _assert_tree_close(out, ref)
+
+
 def test_two_stage_router_uses_fused_path():
     g, k = 2, 6
     upd = jax.random.normal(KEY, (g, k, 33))
@@ -84,6 +103,121 @@ def test_two_stage_router_uses_fused_path():
     ref = aggregation.two_stage(upd, sw, sm,
                                 dataclasses.replace(cfg, fused_agg=False))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def _mixed_tree(c, key=KEY):
+    """Multi-leaf, mixed-dtype, odd-size tree: a ragged f32 matrix, a
+    bf16 leaf, a tiny bias-like leaf, and an f16 leaf."""
+    return {"a": jax.random.normal(key, (c, 13, 7)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (c, 301)).astype(jnp.bfloat16),
+            "c": jax.random.normal(jax.random.fold_in(key, 2), (c, 5)),
+            "d": jax.random.normal(jax.random.fold_in(key, 3),
+                                   (c, 192)).astype(jnp.float16)}
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_leafwise_matches_flatten_on_mixed_tree(agg):
+    """Leaf-streaming (segment-table) engine vs the PR-1 flatten path on a
+    multi-leaf mixed-dtype/odd-size tree."""
+    c = 9
+    tree = _mixed_tree(c)
+    mask = jnp.ones((c,)).at[3].set(0.0)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 5), (c,)) + 0.1
+    cfg = FedConfig(n_clients=c, aggregator=agg)
+    leaf = fused_aggregate_tree(tree, w, mask, cfg, blk=128)
+    flat = fused_aggregate_tree_flat(tree, w, mask, cfg, blk=128)
+    for k in tree:
+        assert leaf[k].dtype == tree[k].dtype
+        # half-precision leaves: within one ulp of each other's rounding
+        atol = 1e-5 if leaf[k].dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(leaf[k], np.float32),
+                                   np.asarray(flat[k], np.float32),
+                                   atol=atol)
+
+
+@pytest.mark.parametrize("agg", ["median", "trimmed_mean", "fedavg"])
+def test_halfprec_leaves_match_fp32_oracle(agg):
+    """bf16/f16 leaves accumulate fp32 throughout with exactly one cast at
+    the pass-2 output write: the result must match the fp32 oracle (the
+    same tree in fp32) to half-precision resolution — a per-slice cast
+    round-trip would drift further."""
+    c = 8
+    tree = _mixed_tree(c)
+    tree32 = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), tree)
+    mask = jnp.ones((c,)).at[1].set(0.0)
+    w = jnp.ones((c,))
+    cfg = FedConfig(n_clients=c, aggregator=agg)
+    out = fused_aggregate_tree(tree, w, mask, cfg, blk=128)
+    oracle = aggregation.aggregate_ref(tree32, w, mask, cfg)
+    for k in tree:
+        tol = 1e-5 if tree[k].dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out[k], np.float32),
+                                   np.asarray(oracle[k]), atol=tol)
+
+
+def _all_eqns(jaxpr):
+    """All eqns of a jaxpr including nested call/control-flow sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs_of(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs_of(v):
+    import jax.core as jcore
+    if isinstance(v, jcore.ClosedJaxpr):
+        return [v.jaxpr]
+    if isinstance(v, jcore.Jaxpr):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for item in v for j in _subjaxprs_of(item)]
+    return []
+
+
+def test_jaxpr_has_no_leaf_sized_concatenate():
+    """Acceptance guard for the leaf-streaming rework: the jaxpr of
+    ``fused_aggregate_tree`` on a multi-leaf tree must not materialise a
+    flattened (C, N) matrix — no concatenate at (or above) leaf size."""
+    c = 8
+    tree = _mixed_tree(c)
+    mask = jnp.ones((c,))
+    w = jnp.ones((c,))
+    cfg = FedConfig(n_clients=c, aggregator="trimmed_mean")
+    jaxpr = jax.make_jaxpr(
+        lambda u, ww, m: fused_aggregate_tree(u, ww, m, cfg, blk=128)
+    )(tree, w, mask)
+    min_leaf = min(int(l.size) for l in tree.values())
+    big_concats = [
+        eqn for eqn in _all_eqns(jaxpr.jaxpr)
+        if eqn.primitive.name == "concatenate"
+        and int(np.prod(eqn.outvars[0].aval.shape)) >= min_leaf]
+    assert not big_concats, big_concats
+
+
+def test_segment_table_and_auto_blk():
+    segs, total = make_segments([300, 128, 5], 128)
+    # (start, nblocks, n, per-leaf blk): narrow leaves get 128-aligned
+    # blocks of their own width, and single-block leaves all share step 0
+    # (constant block index -> no extra DMA, no extra grid steps)
+    assert [tuple(s) for s in segs] == [
+        (0, 3, 300, 128), (0, 1, 128, 128), (0, 1, 5, 128)]
+    assert total == 3
+    segs, total = make_segments([16384, 379, 5], 16384)
+    assert [s.blk for s in segs] == [16384, 384, 128]
+    assert total == 1                      # whole tree in one grid step
+    segs, total = make_segments([300, 300], 128)
+    assert [s.start for s in segs] == [0, 3] and total == 6
+    # CPU: never wider than the longest leaf, 128-aligned
+    assert auto_blk(8, [300, 128, 5], backend="cpu") == 384
+    # cache cap: the (C, C, blk) rank working set stays in the LLC
+    assert auto_blk(8, [1 << 20], backend="cpu") == 1 << 15
+    assert auto_blk(16, [1 << 20], backend="cpu") == 1 << 14
+    # TPU: VMEM-sized, 128-aligned, clamped
+    blk = auto_blk(16, [1 << 20], backend="tpu")
+    assert 512 <= blk <= 8192 and blk % 128 == 0
 
 
 def test_pairwise_distance_kernel_matches_ref():
