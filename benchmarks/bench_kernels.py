@@ -215,7 +215,80 @@ def run(budget="small"):
             "bytes_per_device": roof["bytes_fused"] / D,
             "hbm_passes_fused": roof["hbm_passes_fused"],
         })
+
+    out.append(bench_pod_scan_driver())
     return out
+
+
+def bench_pod_scan_driver(rounds=8, chunk=4):
+    """Multi-round PodEngine training through the shared chunked-scan
+    driver (core/driver.py, used by pod.run) vs the per-round jitted
+    python loop: the scan driver does ONE host sync per chunk instead of
+    one per round and donates the carry.  Tiny-lm reduced config so the
+    entry stays cheap on the CI CPU; histories are bit-for-bit equal
+    (tests/test_driver.py), so this measures pure driver overhead."""
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import ARCHS
+    from repro.core import driver as scan_driver, pod
+    from repro.launch.train import synthetic_lm_batches
+    from repro.models import transformer
+    from repro.optim import optimizers
+
+    cfgm = ARCHS["tiny-lm"].replace(n_layers=2, d_model=64, n_heads=4,
+                                    n_kv_heads=2, d_ff=128, vocab_size=128,
+                                    head_dim=16)
+    C, B, S = 4, 8, 32
+    fed = FedConfig(n_clients=C)
+    tc = TrainConfig(global_batch=B, seq_len=S, lr=1e-2, warmup_steps=2,
+                     total_steps=rounds)
+    params = transformer.init_transformer(jax.random.PRNGKey(0), cfgm)
+    opt_init, _ = optimizers.make_optimizer(tc)
+
+    def fresh_state():
+        # fresh buffers every call: the drivers DONATE the carry, which
+        # would otherwise free the shared template params
+        p = jax.tree_util.tree_map(jnp.array, params)
+        return pod.init_pod_state(p, opt_init, C, fed,
+                                  jax.random.PRNGKey(0))
+
+    step = pod.make_train_step(cfgm, fed, tc)
+    sampler = synthetic_lm_batches(cfgm, tc, C, 0)
+    sample_key = jax.random.PRNGKey(123)        # never aliased into a carry
+    batch_fn = lambda t: sampler(jax.random.fold_in(sample_key, t))
+
+    drv = scan_driver.ScanDriver(lambda st, xs: step(st, xs[1]),
+                                 chunk_steps=chunk)
+    step_jit = jax.jit(step, donate_argnums=(0,))
+
+    def run_scan(st):
+        drv.run(st, batch_fn, rounds)
+
+    def run_python(st):
+        for t in range(rounds):
+            st, m = step_jit(st, dict(batch_fn(t)))
+            jax.device_get(m)                   # per-round host sync
+
+    def time_driver(fn, reps=3):
+        fn(fresh_state())                       # warmup: compile paths
+        best = float("inf")
+        for _ in range(reps):
+            st = fresh_state()                  # donated: fresh per rep
+            t0 = time.perf_counter()
+            fn(st)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_scan, t_py = float("inf"), float("inf")
+    for _ in range(3):                          # interleaved (see above)
+        t_py = min(t_py, time_driver(run_python, reps=1))
+        t_scan = min(t_scan, time_driver(run_scan, reps=1))
+    return {
+        "name": f"driver/pod_scan/R{rounds}/chunk{chunk}/C{C}",
+        "wall_s": t_scan, "wall_s_python": t_py,
+        "speedup_vs_python": t_py / t_scan,
+        "rounds": rounds, "chunk_rounds": chunk,
+        "host_syncs_scan": -(-rounds // chunk), "host_syncs_python": rounds,
+    }
 
 
 def main(budget="small"):
@@ -229,6 +302,10 @@ def main(budget="small"):
             extra = (f"speedup_vs_replicated="
                      f"{r['speedup_vs_replicated']:.2f}x dev={r['devices']} "
                      f"parity={r['parity_max_abs_diff']:.1e}")
+        elif "speedup_vs_python" in r:
+            extra = (f"speedup_vs_python={r['speedup_vs_python']:.2f}x "
+                     f"syncs={r['host_syncs_scan']}"
+                     f"/{r['host_syncs_python']}")
         elif "speedup_vs_ref" in r:
             extra = (f"speedup={r['speedup_vs_ref']:.2f}x "
                      f"hbm_passes={r['hbm_passes_fused']:.0f}"

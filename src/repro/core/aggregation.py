@@ -54,18 +54,24 @@ def _masked_sorted(leaf, mask):
     return jnp.sort(jnp.where(m > 0, leaf.astype(jnp.float32), _BIG), axis=0)
 
 def median(updates, mask):
-    """Coordinate-wise median over masked-in clients."""
+    """Coordinate-wise median over masked-in clients.  An empty cohort
+    (all-zero mask) returns a ZERO update: the three-phase protocol makes
+    empty participation masks a normal state, and the unclamped rank
+    index (-1 wraps to the last sorted entry) used to leak the ``_BIG``
+    masked-out sentinel into the global model."""
     n = mask.sum()
 
     def agg(leaf):
         s = _masked_sorted(leaf, mask)
         k = leaf.shape[0]
-        # indices of the middle element(s) among the first n sorted entries
-        lo = jnp.floor((n - 1) / 2).astype(jnp.int32)
-        hi = jnp.ceil((n - 1) / 2).astype(jnp.int32)
+        # indices of the middle element(s) among the first n sorted
+        # entries, clamped to n >= 1 so an empty mask cannot index -1
+        lo = jnp.floor(jnp.maximum(n - 1, 0) / 2).astype(jnp.int32)
+        hi = jnp.ceil(jnp.maximum(n - 1, 0) / 2).astype(jnp.int32)
         take = lambda i: jnp.take_along_axis(
             s, jnp.broadcast_to(i, (1,) + leaf.shape[1:]).astype(jnp.int32), 0)[0]
-        return (0.5 * (take(lo) + take(hi))).astype(leaf.dtype)
+        out = 0.5 * (take(lo) + take(hi))
+        return jnp.where(n > 0, out, 0.0).astype(leaf.dtype)
 
     return jax.tree_util.tree_map(agg, updates)
 
@@ -110,9 +116,14 @@ def krum(updates, mask, f, *, multi_m=1):
     j = jnp.arange(k, dtype=jnp.float32)[None, :]
     take = jnp.maximum(n - f - 2, 1.0)
     scores = jnp.where(j < take, closest, 0.0).sum(1)
-    scores = jnp.where(mask > 0, scores, _BIG)
+    # masked-out clients rank past every real one — inf, not _BIG: a lone
+    # selected client's score is _BIG + d (its distances are to masked
+    # peers) and must still beat the excluded rows
+    scores = jnp.where(mask > 0, scores, jnp.inf)
     order = jnp.argsort(scores)
-    sel = jnp.zeros((k,), jnp.float32).at[order[:multi_m]].set(1.0)
+    # restrict winners to masked-in clients: an empty cohort must yield a
+    # zero update, not an arbitrary client's (all scores tie at _BIG)
+    sel = jnp.zeros((k,), jnp.float32).at[order[:multi_m]].set(1.0) * mask
     return weighted_mean(updates, sel, sel)
 
 
@@ -157,7 +168,9 @@ def aggregate_ref(updates, weights, mask, cfg):
     ref = median(updates, mask)
     gate = cosine_outlier_mask(updates, ref, mask, cfg.cosine_outlier_thresh)
     m = mask * gate
-    # never gate everyone out
+    # never gate everyone out; an INCOMING all-zero mask (empty cohort —
+    # a normal state of the slotted protocol) falls through to the
+    # aggregators, each of which returns a zero update for it
     m = jnp.where(m.sum() > 0, m, mask)
     if cfg.aggregator == "fedavg":
         return weighted_mean(updates, weights, m)
@@ -205,10 +218,18 @@ def aggregate_sharded(updates, weights, mask, cfg, mesh, axes=None):
     leaves, treedef = jax.tree_util.tree_flatten(updates)
     C = leaves[0].shape[0]
     flat = [l.reshape(1, C, -1) for l in leaves]          # views, no copy
-    in_specs, shard_flags = sh.client_flat_specs(
+    in_shardings, shard_flags = sh.client_flat_shardings(
         [f.shape[-1] for f in flat], mesh, axes)
+    in_specs = tuple(s.spec for s in in_shardings)
     out_specs = tuple(P(None, axes) if f else P(None, None)
                       for f in shard_flags)
+    # constrain the flat views to the shard_map input layout BEFORE the
+    # boundary: GSPMD then materialises the producer's outputs (e.g. the
+    # vmap'd per-client backward) directly in the (C, shard) layout, so
+    # the shard_map entry is a no-op instead of an all-to-all reshard
+    # (jaxpr-guarded in tests/test_sharded_agg.py)
+    flat = [jax.lax.with_sharding_constraint(f, s)
+            for f, s in zip(flat, in_shardings)]
 
     def agg(w, m, *fl):
         own = jnp.float32(1.0)

@@ -15,13 +15,13 @@ bill only the team).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, attacks, fitness, selection, slots
+from repro.core import aggregation, attacks, driver as scan_driver, fitness, \
+    selection, slots
 
 
 class FedState(NamedTuple):
@@ -139,7 +139,8 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         elif fed_cfg.algorithm == "fedpow":
             d = fed_cfg.fedpow_d or K
             m = fed_cfg.fedpow_m or max(K // 2, 1)
-            team = selection.fedpow_select(gl, avail, d, m, r_sel)
+            team = selection.fedpow_select(gl, avail, d, m, r_sel,
+                                           n=data["n"])
         else:
             raise ValueError(fed_cfg.algorithm)
 
@@ -149,9 +150,13 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         stale = fed_cfg.stale_weight * state.team * (1.0 - avail)
         part = jnp.clip(team + stale, 0.0, 1.0)
         if fed_cfg.paper_exact_agg:
-            # Algorithm 1 literal: w <- sum n_k/|S_t| * w_k
-            w = data["n"].astype(jnp.float32) / jnp.maximum(team.sum(), 1.0)
-            w = w * team
+            # Algorithm 1's size-proportional FedAvg step.  The paper
+            # writes n_k/|S_t|, but data["n"] carries REAL partition
+            # sizes, so dividing raw counts by the team size would scale
+            # the update by ~mean(n_k) (hundreds x); the convex
+            # combination the algorithm means is n_k / sum_{j in S_t} n_j
+            w = data["n"].astype(jnp.float32) * team
+            w = w / jnp.maximum(w.sum(), 1e-12)
             agg = jax.tree_util.tree_map(
                 lambda l: jnp.tensordot(w.astype(l.dtype), l, axes=(0, 0)),
                 updates)
@@ -170,7 +175,15 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         new_trust = aggregation.update_trust(state.trust, scores, team,
                                              fed_cfg.trust_decay)
 
+        # cost accounting: FFA rounds bill every available client, slot
+        # rounds the present team — PLUS, in both, the stale catch-up
+        # clients: they went unavailable but still trained and submitted
+        # an update at stale_weight, so their client-round is real work.
+        # The paper-exact branch weighs by n_k * team only (no stale
+        # contribution enters the aggregate), so nothing extra is billed
         billed = jnp.where(state.h, avail.sum(), team.sum())
+        if not fed_cfg.paper_exact_agg:
+            billed = billed + (stale > 0).sum()
         new_state = FedState(
             params=new_params, team=team, trust=new_trust, alpha=alpha,
             slot=new_slot, h=h_next, rng=rng, round=t + 1,
@@ -195,24 +208,14 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
     eval_fn(params) -> dict of server-side metrics (optional, per round).
     Returns (final_state, history list of dicts).
 
-    driver="scan" (default): rounds run in ``chunk_rounds``-sized
-    ``jax.lax.scan`` chunks with the per-round metric history (and
-    eval_fn) kept on device — ONE device_get per chunk instead of 2+
-    host syncs per round.  data_fn stays a host callable; its batches
-    are stacked per chunk and streamed through the scan.  Availability
-    sampling moves inside the scan body (same fold_in streams, so the
-    history is bit-for-bit identical to driver="python", the original
-    per-round jit loop kept for parity testing).
-
-    Zero-copy: the chunk step DONATES its carry state
-    (``donate_argnums``) so params/opt-state update in place instead of
-    allocating a fresh copy per chunk (batch buffers are pure inputs
-    with nothing to alias, so they are not donated), and the driver
-    double-buffers chunk batches — while chunk k computes, chunk k+1's
-    batches are built on host and staged with an async
-    ``jax.device_put`` so the host->device transfer overlaps compute.
-    Neither changes numerics: the history stays bit-for-bit equal to
-    driver="python"."""
+    driver="scan" (default): rounds run through the shared chunked-scan
+    driver (core/driver.py — donated carry, on-device metric history,
+    double-buffered batch staging; the pod engine drives multi-round
+    training through the same subsystem).  data_fn stays a host
+    callable; availability sampling moves inside the scan body (same
+    fold_in streams), so the history is bit-for-bit identical to
+    driver="python", the original per-round jit loop kept for parity
+    testing."""
     r_init, r_run = jax.random.split(rng)
     params = model.init(r_init)
     state = init_state(params, fed_cfg.n_clients, fed_cfg, r_run)
@@ -257,34 +260,6 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
             metrics = {**metrics, **eval_fn(st.params)}
         return st, metrics
 
-    # donate the carry only: state aliases the output state buffers
-    # (params/opt-state update in place); batch buffers have no output to
-    # alias (pure inputs), donating them just burns a copy + a warning
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def scan_chunk(st, ts, batches):
-        return jax.lax.scan(body, st, (ts, batches))
-
-    def stage_chunk(t0):
-        """Build chunk t0's stacked batches and start their host->device
-        transfer (async device_put) — called while the PREVIOUS chunk is
-        still computing, so the upload overlaps compute."""
-        ts = list(range(t0, min(t0 + chunk_rounds, n_rounds + 1)))
-        batches = [dict(data_fn(t, jax.random.fold_in(rng, t))) for t in ts]
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
-        return ts, jnp.asarray(ts, jnp.int32), jax.device_put(stacked)
-
-    history = []
-    pending = stage_chunk(1) if n_rounds >= 1 else None
-    next_t0 = 1 + chunk_rounds
-    while pending is not None:
-        ts, ts_dev, stacked = pending
-        # dispatch is async: the scan runs while the next chunk stages
-        state, mets = scan_chunk(state, ts_dev, stacked)
-        pending = stage_chunk(next_t0) if next_t0 <= n_rounds else None
-        next_t0 += chunk_rounds
-        mets = jax.device_get(mets)                # one sync per chunk
-        for j, t in enumerate(ts):
-            row = {k: v[j] for k, v in mets.items()}
-            row["round"] = t
-            history.append(row)
-    return state, history
+    return scan_driver.run_chunked(
+        body, state, lambda t: data_fn(t, jax.random.fold_in(rng, t)),
+        n_rounds, chunk_steps=chunk_rounds, t0=1, index_key="round")

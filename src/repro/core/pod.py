@@ -22,8 +22,16 @@ param axis additionally shards over the mesh
 (aggregation.aggregate_sharded): every device streams only its shard in
 both passes and only the (C,) cosine partials (+ Krum's Gram matrix)
 cross devices in one psum, so per-device HBM traffic drops by the mesh
-size instead of replicating the whole grad matrix.  Memory-feasible for
-<=20B models (see DESIGN.md §2) and used by the smoke tests.
+size instead of replicating the whole grad matrix; the grads are
+constrained to the ``client_flat_specs`` layout before the shard_map
+boundary, so the vmap'd backward emits them in place — no reshard
+collective at the boundary.  Memory-feasible for <=20B models (see
+DESIGN.md §2) and used by the smoke tests.
+
+Multi-round training runs through ``pod.run`` on the shared chunked-scan
+driver (core/driver.py): donated carry, on-device metric history, and
+sharding-aware double-buffered batch prefetch — the same subsystem that
+drives ``fedfits.run`` (wired end-to-end by ``launch/train.py``).
 """
 from __future__ import annotations
 
@@ -32,7 +40,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, fitness, selection, slots
+from repro.core import aggregation, driver as scan_driver, fitness, \
+    selection, slots
 from repro.models import transformer
 from repro.optim import optimizers
 
@@ -257,3 +266,59 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
         return new_state, metrics
 
     return train_step
+
+
+def run(state, train_step, batch_fn, n_rounds, *, driver="scan",
+        chunk_rounds=8, batch_sharding=None, t0=0, on_chunk=None):
+    """Multi-round PodEngine training through the shared chunked-scan
+    driver (core/driver.py) — the same subsystem that drives
+    ``fedfits.run``.
+
+    ``train_step`` is an (unjitted) step from ``make_train_step``;
+    ``batch_fn(step)`` a host callable returning one batch dict.
+
+    driver="scan" (default): ``chunk_rounds`` steps per ``lax.scan``
+    chunk with the metric history on device (ONE device_get per chunk),
+    the carry DONATED (params/opt-state update in place), and chunk k+1's
+    batches double-buffer-staged while chunk k computes.  With
+    ``batch_sharding`` (a NamedSharding tree matching one batch — e.g.
+    ``launch.inputs.batch_shardings``) the staging ``device_put``s each
+    chunk's batches directly onto their pod shards (sharding-aware
+    prefetch) instead of the default device.
+
+    driver="python": the original per-round jitted loop, kept for parity
+    testing — the scan history is bit-for-bit equal to it.
+
+    PRNG footgun: the donated carry aliases the arrays ``state`` was
+    built from, including the key stored in ``PodFedState.rng`` — the
+    first chunk deletes those buffers, so ``batch_fn`` must sample from a
+    COPY of the key taken before this call (see launch/train.py).
+
+    Returns (final_state, history rows keyed by "step").
+    ``on_chunk(state, rows)`` fires after each chunk (logging /
+    checkpoint hook); the python driver fires it per round."""
+    def body(st, xs):
+        _, batch = xs
+        return train_step(st, batch)
+
+    if driver == "python":
+        step_jit = jax.jit(train_step, donate_argnums=(0,))
+        put_sharding = batch_sharding
+        history = []
+        for t in range(t0, t0 + n_rounds):
+            batch = dict(batch_fn(t))
+            if put_sharding is not None:
+                batch = jax.device_put(batch, put_sharding)
+            state, metrics = step_jit(state, batch)
+            row = {k: jax.device_get(v) for k, v in metrics.items()}
+            row["step"] = t
+            if on_chunk is not None:
+                on_chunk(state, [row])
+            history.append(row)
+        return state, history
+    if driver != "scan":
+        raise ValueError(driver)
+
+    return scan_driver.run_chunked(
+        body, state, batch_fn, n_rounds, chunk_steps=chunk_rounds, t0=t0,
+        batch_sharding=batch_sharding, index_key="step", on_chunk=on_chunk)

@@ -54,11 +54,22 @@ def fedrand_select(avail, c, rng):
     return ((ranks < m) & (avail > 0)).astype(jnp.float32)
 
 
-def fedpow_select(local_losses, avail, d, m, rng):
+def fedpow_select(local_losses, avail, d, m, rng, n=None):
     """Power-of-choice [Cho et al. 2020]: sample a candidate set of size d
-    (proportional to availability), then pick the m with highest local loss."""
+    WITHOUT replacement proportional to the data fraction n_k (the
+    paper's candidate distribution), then pick the m with highest local
+    loss.
+
+    The ∝ n_k draw uses Gumbel-top-d: top-d of log(n_k) + Gumbel noise is
+    a without-replacement sample from the n_k-proportional distribution
+    (Efraimidis-Spirakis).  n=None falls back to uniform candidates
+    (all-equal weights)."""
     k = avail.shape[0]
-    u = jax.random.uniform(rng, (k,))
+    if n is None:
+        logw = jnp.zeros((k,), jnp.float32)
+    else:
+        logw = jnp.log(jnp.maximum(n.astype(jnp.float32), 1e-12))
+    u = logw + jax.random.gumbel(rng, (k,))
     cand_pri = jnp.where(avail > 0, u, -jnp.inf)
     cand_order = jnp.argsort(-cand_pri)
     cand_rank = jnp.zeros((k,), jnp.float32).at[cand_order].set(

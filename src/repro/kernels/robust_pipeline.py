@@ -538,9 +538,14 @@ def _krum_weights(d, mask, f, multi_m):
     j = jnp.arange(C, dtype=jnp.float32)[None, None, :]
     take = jnp.maximum(n - f - 2, 1.0)[:, :, None]
     scores = jnp.where(j < take, closest, 0.0).sum(axis=2)    # (G, C)
-    scores = jnp.where(mask > 0, scores, _BIG)
+    # inf (not _BIG) so a lone selected client (score _BIG + d, from
+    # distances to masked peers) still outranks the excluded rows
+    scores = jnp.where(mask > 0, scores, jnp.inf)
     pos = jnp.argsort(jnp.argsort(scores, axis=1), axis=1)
-    sel = (pos < multi_m).astype(jnp.float32)
+    # winners restricted to masked-in clients: an empty cohort row (all
+    # scores tied at _BIG) must produce zero weights, not an arbitrary
+    # client's update (mirrors aggregation.krum's empty-cohort guard)
+    sel = (pos < multi_m).astype(jnp.float32) * (mask > 0)
     return sel / jnp.maximum(sel.sum(axis=1, keepdims=True), 1e-12)
 
 
@@ -598,7 +603,10 @@ def fused_pipeline(x, weights, mask, *, aggregator="trimmed_mean",
 
 def _resolve_gate(dots, sqn, refsq, mask, cosine_thresh):
     """Cosine outlier gate from the pass-1 partials; never gates everyone
-    out. O(G*C) scalars, on-device."""
+    out. O(G*C) scalars, on-device.  An INCOMING all-zero mask row passes
+    through unchanged — every pass-2 combine mode then emits a zero row
+    for that cohort (the kernels mask by ``m``), matching the reference
+    path's empty-cohort semantics."""
     cos = dots / jnp.maximum(jnp.sqrt(sqn * refsq), 1e-12)
     gate = ((cos >= cosine_thresh) & (mask > 0)).astype(jnp.float32)
     m = mask * gate

@@ -65,6 +65,18 @@ def infer_batch_specs(cfg: ModelConfig, shape_name: str, *, decode=False):
     return batch
 
 
+def batch_shardings(batch, mesh):
+    """``NamedSharding`` tree for a train batch pytree (arrays OR
+    ShapeDtypeStructs): the leading global-batch dim shards over the
+    pod+data mesh axes.  This is the sharding the pod scan driver's
+    prefetch stages chunk batches onto (``core/driver.py`` /
+    ``pod.run(batch_sharding=...)``), so chunk k+1's host->device
+    transfer lands directly on the pod shards while chunk k computes."""
+    from repro.sharding import specs as sh
+
+    return sh.named(mesh, sh.batch_specs(batch, mesh))
+
+
 def cache_specs_struct(cfg: ModelConfig, shape_name: str):
     """Abstract cache pytree (eval_shape over init_cache)."""
     from repro.models import transformer

@@ -23,6 +23,7 @@ from repro.configs.base import FedConfig, TrainConfig
 from repro.configs.registry import get_config
 from repro.core import pod
 from repro.data import synthetic
+from repro.launch import inputs
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
 from repro.optim import optimizers
@@ -70,6 +71,11 @@ def main():
                     help="per_client: coordinate-robust aggregation over "
                          "per-client grads, mesh-sharded along the "
                          "flattened param axis")
+    ap.add_argument("--driver", default="scan", choices=["scan", "python"],
+                    help="scan: chunked lax.scan rounds (donated carry, "
+                         "sharding-aware batch prefetch); python: the "
+                         "per-round jit loop (parity oracle)")
+    ap.add_argument("--chunk-rounds", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -88,13 +94,10 @@ def main():
 
     state_sh = sh.named(mesh, sh.param_specs(state, mesh=mesh))
     state = jax.device_put(state, state_sh)
-    # donate the carry: params/opt-state update in place, no per-step copy
-    step_fn = jax.jit(pod.make_train_step(cfg, fed, tc, robust=args.robust,
-                                          agg_mesh=mesh if args.robust
-                                          else None),
-                      in_shardings=(state_sh, None),
-                      out_shardings=(state_sh, None),
-                      donate_argnums=(0,))
+    # the scan driver donates the carry: params/opt-state update in
+    # place, no per-step copy (sharding follows the committed state)
+    step_fn = pod.make_train_step(cfg, fed, tc, robust=args.robust,
+                                  agg_mesh=mesh if args.robust else None)
 
     start = 0
     if args.ckpt_dir:
@@ -103,22 +106,48 @@ def main():
             state, start = restored, at
             print(f"restored checkpoint at step {at}")
 
+    # scan-driver checkpoints happen at chunk ends (mid-chunk states never
+    # exist host-side): align the chunk size to the checkpoint cadence so
+    # a crash loses at most ckpt_every-1 steps, like the python driver
+    chunk_rounds = args.chunk_rounds
+    if args.ckpt_dir and args.driver == "scan":
+        chunk_rounds = min(chunk_rounds, args.ckpt_every)
+        if args.ckpt_every % chunk_rounds:
+            print(f"# note: ckpt-every {args.ckpt_every} not divisible by "
+                  f"chunk-rounds {chunk_rounds}; saves land on the first "
+                  f"chunk end at/after each due step")
+
     sampler = synthetic_lm_batches(cfg, tc, fed.n_clients, tc.seed)
     # the donated carry aliases `key` (PodFedState.rng) and deletes its
-    # buffer on the first step; sample from a live copy
+    # buffer on the first chunk; sample from a live copy
     sample_key = jnp.array(np.asarray(key))
+    # sharding-aware prefetch: stage each chunk's batches directly onto
+    # their pod shards while the previous chunk computes
+    batch_sh = inputs.batch_shardings(
+        jax.eval_shape(sampler, jax.random.PRNGKey(0)), mesh)
     t0 = time.time()
-    with mesh:
-        for step in range(start, args.steps):
-            batch = sampler(jax.random.fold_in(sample_key, step))
-            state, metrics = step_fn(state, batch)
+
+    def on_chunk(st, rows):
+        for row in rows:
+            step = row["step"]
             if step % 5 == 0 or step == args.steps - 1:
-                m = {k: round(float(v), 4) for k, v in metrics.items()}
+                m = {k: round(float(v), 4) for k, v in row.items()
+                     if k != "step"}
                 m["step"] = step
                 m["wall_s"] = round(time.time() - t0, 1)
                 print(json.dumps(m))
-            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                ckpt.save_step(args.ckpt_dir, step + 1, state)
+        last = rows[-1]["step"]
+        if args.ckpt_dir and any((r["step"] + 1) % args.ckpt_every == 0
+                                 for r in rows):
+            ckpt.save_step(args.ckpt_dir, last + 1, st)
+
+    with mesh:
+        state, _ = pod.run(
+            state, step_fn, lambda t: sampler(jax.random.fold_in(
+                sample_key, t)),
+            args.steps - start, driver=args.driver,
+            chunk_rounds=chunk_rounds, batch_sharding=batch_sh,
+            t0=start, on_chunk=on_chunk)
     print("done")
 
 

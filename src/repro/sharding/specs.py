@@ -230,6 +230,17 @@ def client_flat_specs(sizes, mesh, axes=("data", "model")):
     return tuple(specs), tuple(flags)
 
 
+def client_flat_shardings(sizes, mesh, axes=("data", "model")):
+    """``client_flat_specs`` as concrete ``NamedSharding``s — the layout
+    the sharded robust-aggregation path constrains its *inputs* to
+    (``jax.lax.with_sharding_constraint`` before the shard_map boundary),
+    so the per-client backward emits grads already in the (C, shard)
+    layout and the boundary does no reshard collective.  Returns
+    (shardings, sharded_flags)."""
+    specs, flags = client_flat_specs(sizes, mesh, axes)
+    return tuple(NamedSharding(mesh, s) for s in specs), flags
+
+
 def _dp_axes(mesh):
     names = mesh.axis_names
     return ("pod", "data") if "pod" in names else ("data",)

@@ -1,0 +1,141 @@
+"""Round-level accounting correctness: Algorithm-1 aggregation weights
+(convex combination, not the raw-count/|S_t| blow-up) and stale
+catch-up billing in ``cost_client_rounds``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import fedfits
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+K = 6
+
+
+def _setup(cfg):
+    model = build(ARCHS["paper-mlp"])
+    fed, _ = build_federation(0, kind="tabular", n=600, n_clients=K,
+                              batch_size=16, n_classes=22)
+    key = jax.random.PRNGKey(0)
+    k_init, k_run = jax.random.split(key)
+    params = model.init(k_init)
+    state = fedfits.init_state(params, K, cfg, k_run)
+    batch = dict(fed.data_fn(1, jax.random.fold_in(key, 1)))
+    return model, state, batch
+
+
+def test_paper_exact_agg_is_convex_combination():
+    """The Algorithm-1 literal path must apply a CONVEX combination of
+    client updates weighted n_k / sum_{j in S_t} n_j — the old
+    n_k/|S_t| normalisation scaled the update by ~mean(n_k) since
+    data["n"] carries real partition sizes."""
+    cfg = FedConfig(n_clients=K, paper_exact_agg=True, local_epochs=1,
+                    local_lr=0.05)
+    captured = {}
+
+    def update_attack(updates, mal, rng):      # eager capture, no attack
+        captured["u"] = updates
+        return updates
+
+    model, state, batch = _setup(cfg)
+    round_fn = fedfits.make_round(model, cfg, update_attack=update_attack)
+    new_state, metrics = round_fn(state, batch)     # eager: captures live
+
+    team = np.asarray(metrics["team"])
+    n = np.asarray(batch["n"], np.float64)
+    w = n * team
+    w = w / w.sum()
+    assert abs(w.sum() - 1.0) < 1e-6 and (w >= 0).all()   # convex weights
+
+    for upd, p_new, p_old in zip(
+            jax.tree_util.tree_leaves(captured["u"]),
+            jax.tree_util.tree_leaves(new_state.params),
+            jax.tree_util.tree_leaves(state.params)):
+        upd = np.asarray(upd, np.float64)
+        expected = np.tensordot(w, upd, axes=(0, 0))
+        got = np.asarray(p_new, np.float64) - np.asarray(p_old, np.float64)
+        np.testing.assert_allclose(got, expected, atol=1e-5)
+        # and the convexity bound the old /|S_t| formula violated by
+        # ~mean(n_k): the aggregate never exceeds the largest update
+        assert np.abs(got).max() <= np.abs(upd).max() + 1e-6
+
+
+def test_stale_clients_billed_in_slot_rounds():
+    """Slot rounds must bill the present team PLUS the stale catch-up
+    contributors ((stale > 0).sum()) — they trained and submitted an
+    update at stale_weight, so their client-round is real work."""
+    cfg = FedConfig(n_clients=K, stale_weight=0.3, local_epochs=1,
+                    local_lr=0.05)
+    model, state, batch = _setup(cfg)
+    round_fn = fedfits.make_round(model, cfg)
+
+    team0 = jnp.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    avail = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 1.0])
+    state = state._replace(team=team0, h=jnp.array(False),
+                           round=jnp.int32(3))
+    batch = dict(batch)
+    batch["avail"] = avail
+
+    new_state, metrics = round_fn(state, batch)
+    # slot round: team = prior team ∩ available = clients {0, 2};
+    # client 1 is a stale catch-up contributor -> billed 2 + 1 = 3
+    assert float(metrics["team_size"]) == 2.0
+    billed = float(new_state.cost_client_rounds) \
+        - float(state.cost_client_rounds)
+    assert billed == 3.0
+
+
+def test_ffa_round_bills_available_plus_stale():
+    """FFA (h=True) rounds bill every available client plus the stale
+    catch-up contributors — stale updates enter the aggregation in FFA
+    rounds too (part = clip(team + stale) is h-independent)."""
+    cfg = FedConfig(n_clients=K, stale_weight=0.3, local_epochs=1,
+                    local_lr=0.05)
+    model, state, batch = _setup(cfg)
+    round_fn = fedfits.make_round(model, cfg)
+    avail = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 1.0])
+    state = state._replace(h=jnp.array(True), round=jnp.int32(3))
+    batch = dict(batch)
+    batch["avail"] = avail
+    new_state, _ = round_fn(state, batch)
+    billed = float(new_state.cost_client_rounds) \
+        - float(state.cost_client_rounds)
+    # 5 available + 1 stale contributor (prior-team client 1, unavailable)
+    assert billed == 6.0
+
+
+def test_paper_exact_agg_does_not_bill_stale():
+    """paper_exact_agg weighs by n_k * team only — stale updates never
+    enter that aggregate, so they must not be billed either."""
+    cfg = FedConfig(n_clients=K, paper_exact_agg=True, stale_weight=0.3,
+                    local_epochs=1, local_lr=0.05)
+    model, state, batch = _setup(cfg)
+    round_fn = fedfits.make_round(model, cfg)
+    team0 = jnp.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    avail = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 1.0])
+    state = state._replace(team=team0, h=jnp.array(False),
+                           round=jnp.int32(3))
+    batch = dict(batch)
+    batch["avail"] = avail
+    new_state, _ = round_fn(state, batch)
+    billed = float(new_state.cost_client_rounds) \
+        - float(state.cost_client_rounds)
+    assert billed == 2.0      # present team only, no stale client-round
+
+
+def test_no_stale_weight_means_no_stale_billing():
+    """With stale_weight=0 (the default) nothing extra is ever billed —
+    the paper's original accounting is unchanged."""
+    cfg = FedConfig(n_clients=K, local_epochs=1, local_lr=0.05)
+    model, state, batch = _setup(cfg)
+    round_fn = fedfits.make_round(model, cfg)
+    avail = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 1.0])
+    state = state._replace(h=jnp.array(True), round=jnp.int32(3))
+    batch = dict(batch)
+    batch["avail"] = avail
+    new_state, _ = round_fn(state, batch)
+    billed = float(new_state.cost_client_rounds) \
+        - float(state.cost_client_rounds)
+    assert billed == 5.0

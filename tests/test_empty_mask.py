@@ -1,0 +1,117 @@
+"""Empty-cohort correctness: the three-phase protocol (free-for-all ->
+natural selection -> slotted teams) makes all-zero participation masks a
+NORMAL state — every aggregation path must return a ZERO update for an
+empty cohort, never the ``_BIG`` masked-out sentinel that used to leak
+through the unclamped median rank index and Krum's all-tied argsort.
+Covers the reference, the fused Pallas engine, and ``two_stage`` — plus
+fused-vs-ref parity for each case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation
+from repro.kernels.robust_pipeline import fused_aggregate_tree, \
+    fused_two_stage_tree
+
+KEY = jax.random.PRNGKey(0)
+AGGS = ["fedavg", "median", "trimmed_mean", "krum"]
+
+
+def _tree(k=8):
+    return {"w": jax.random.normal(KEY, (k, 4, 3)),
+            "b": jax.random.normal(jax.random.fold_in(KEY, 1), (k, 5))}
+
+
+def _max_abs(tree):
+    return max(float(jnp.abs(l.astype(jnp.float32)).max())
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def _assert_tree_equal(out, ref, atol=1e-6):
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+def test_median_empty_mask_returns_zero():
+    """The reproduced bug: ``median(u, zeros)`` used to emit the 1e30
+    sentinel (rank index -1 wraps to the last = masked sorted entry)."""
+    out = aggregation.median(_tree(), jnp.zeros((8,)))
+    assert _max_abs(out) == 0.0
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_aggregate_empty_mask_zero_both_paths(agg):
+    k = 8
+    tree = _tree(k)
+    w = jnp.ones((k,))
+    zeros = jnp.zeros((k,))
+    cfg = FedConfig(n_clients=k, aggregator=agg)
+    ref = aggregation.aggregate_ref(tree, w, zeros, cfg)
+    fused = fused_aggregate_tree(tree, w, zeros, cfg, blk=128)
+    assert _max_abs(ref) == 0.0, f"{agg}: sentinel leaked in reference"
+    assert _max_abs(fused) == 0.0, f"{agg}: sentinel leaked in fused path"
+    _assert_tree_equal(fused, ref)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_aggregate_single_client_mask_both_paths(agg):
+    """A lone surviving client's update must pass through unchanged (for
+    the masked aggregators) and fused must match ref exactly."""
+    k = 8
+    tree = _tree(k)
+    w = jnp.ones((k,))
+    single = jnp.zeros((k,)).at[3].set(1.0)
+    cfg = FedConfig(n_clients=k, aggregator=agg)
+    ref = aggregation.aggregate_ref(tree, w, single, cfg)
+    fused = fused_aggregate_tree(tree, w, single, cfg, blk=128)
+    for key in tree:
+        np.testing.assert_allclose(np.asarray(ref[key]),
+                                   np.asarray(tree[key][3]), atol=1e-6,
+                                   err_msg=f"{agg}/{key}")
+    _assert_tree_equal(fused, ref)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_two_stage_empty_cohort_row(agg):
+    """One empty cohort among live ones: its slot contributes a zero row
+    at zero cross-slot weight — no sentinel, fused == ref."""
+    g, k = 3, 8
+    upd = {"w": jax.random.normal(KEY, (g, k, 33)),
+           "b": jax.random.normal(jax.random.fold_in(KEY, 2), (g, k, 5))}
+    sw = jnp.ones((g, k))
+    sm = jnp.ones((g, k)).at[1].set(0.0)          # cohort 1 empty
+    cfg = FedConfig(aggregator=agg)
+    ref = aggregation.two_stage_ref(upd, sw, sm, cfg)
+    fused = fused_two_stage_tree(upd, sw, sm, cfg, blk=128)
+    assert _max_abs(ref) < 1e3, f"{agg}: sentinel leaked through two_stage"
+    _assert_tree_equal(fused, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", ["median", "trimmed_mean"])
+def test_two_stage_all_cohorts_empty(agg):
+    g, k = 2, 6
+    upd = {"w": jax.random.normal(KEY, (g, k, 33))}
+    cfg = FedConfig(aggregator=agg)
+    sm = jnp.zeros((g, k))
+    ref = aggregation.two_stage_ref(upd, jnp.ones((g, k)), sm, cfg)
+    fused = fused_two_stage_tree(upd, jnp.ones((g, k)), sm, cfg, blk=128)
+    assert _max_abs(ref) == 0.0
+    assert _max_abs(fused) == 0.0
+
+
+def test_empty_round_keeps_global_model_finite():
+    """End-to-end seam: an aggregate over an empty cohort applied to the
+    params leaves them unchanged (the straggler/poisoning scenario that
+    used to destroy the global model with 1e30s)."""
+    k = 8
+    tree = _tree(k)
+    params = {"w": jnp.ones((4, 3)), "b": jnp.ones((5,))}
+    cfg = FedConfig(n_clients=k, aggregator="median")
+    agg = aggregation.aggregate(tree, jnp.ones((k,)), jnp.zeros((k,)), cfg)
+    new = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                 params, agg)
+    _assert_tree_equal(new, params)

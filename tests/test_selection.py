@@ -63,6 +63,37 @@ def test_fedpow_picks_highest_loss():
     assert np.array_equal(np.where(np.asarray(m) > 0)[0], [5, 6, 7])
 
 
+def test_fedpow_candidates_proportional_to_data_size():
+    """Power-of-choice samples its candidate set ∝ n_k (Gumbel-top-d).
+    With d = m = 1 and equal losses the selected client IS the candidate,
+    whose marginal is exactly n_k / sum n — check the empirical
+    frequencies (4σ tolerance at 3000 trials)."""
+    k = 4
+    n = jnp.array([8.0, 4.0, 2.0, 1.0])
+    avail = jnp.ones((k,))
+    losses = jnp.zeros((k,))
+    sel = jax.jit(lambda r: selection.fedpow_select(losses, avail, 1, 1, r,
+                                                    n=n))
+    counts = np.zeros(k)
+    trials = 3000
+    for i in range(trials):
+        counts += np.asarray(sel(jax.random.fold_in(KEY, i)))
+    freq = counts / trials
+    np.testing.assert_allclose(freq, np.asarray(n / n.sum()), atol=0.04)
+    # proportional, hence monotone in n
+    assert freq[0] > freq[1] > freq[2] > freq[3]
+
+
+def test_fedpow_unavailable_never_candidates_despite_big_n():
+    n = jnp.array([1000.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    avail = AVAIL.at[0].set(0.0)
+    losses = jnp.linspace(1.0, 0.1, 8)
+    for i in range(50):
+        m = selection.fedpow_select(losses, avail, 4, 2,
+                                    jax.random.fold_in(KEY, i), n=n)
+        assert float(m[0]) == 0.0
+
+
 def test_participation_ratio():
     assert float(selection.participation_ratio(jnp.array([0, 1, 2, 0.0]))) \
         == 0.5

@@ -95,6 +95,161 @@ def test_sharded_gate_excises_sign_flipped_clients():
     assert np.all(np.asarray(out["w"]) > 0.5)
 
 
+def _all_eqns(jaxpr):
+    import jax.core as jcore
+
+    def subs(v):
+        if isinstance(v, jcore.ClosedJaxpr):
+            return [v.jaxpr]
+        if isinstance(v, jcore.Jaxpr):
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [j for item in v for j in subs(item)]
+        return []
+
+    for eqn in jaxpr.eqns:
+        yield jaxpr, eqn
+        for v in eqn.params.values():
+            for sub in subs(v):
+                yield from _all_eqns(sub)
+
+
+@multidevice
+def test_no_reshard_between_backward_and_shard_map():
+    """ROADMAP open item 2: the per-client vmap'd backward's grad outputs
+    are constrained to the ``client_flat_specs`` layout, so the
+    ``aggregate_sharded`` shard_map boundary does no reshard.  Guarded at
+    two levels: (a) in the jaxpr, every tensor operand of the shard_map
+    is produced by a ``sharding_constraint`` whose sharding IS the
+    boundary's in_spec — GSPMD therefore has nothing to move; (b) the
+    compiled backward->aggregation program contains no all-to-all."""
+    from repro.configs.registry import ARCHS
+    from repro.data import synthetic
+    from repro.models import transformer
+    from repro.sharding import specs as sh
+
+    CFG = ARCHS["tiny-lm"].replace(n_layers=2, d_model=64, n_heads=4,
+                                   n_kv_heads=2, d_ff=128, vocab_size=128,
+                                   head_dim=16)
+    C, B, S = 4, 8, 32
+    cfg = FedConfig(n_clients=C, aggregator="trimmed_mean")
+    params = transformer.init_transformer(KEY, CFG)
+    toks = synthetic.make_lm_tokens(KEY, B, S + 1, CFG.vocab_size,
+                                    n_latent=2)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    mesh = _mesh((jax.device_count(),), ("data",))
+
+    def backward_and_agg(params, batch, w, team):
+        def client_grad(c):
+            bc = B // C
+
+            def one_loss(p):
+                sub = {k: jax.lax.dynamic_slice_in_dim(v, c * bc, bc)
+                       for k, v in batch.items()}
+                return transformer.loss_fn(p, CFG, sub)
+
+            (_, _), g = jax.value_and_grad(one_loss, has_aux=True)(params)
+            return g
+
+        grads_c = jax.vmap(client_grad)(jnp.arange(C))
+        return aggregation.aggregate_sharded(grads_c, w, team, cfg, mesh,
+                                             axes=("data",))
+
+    w = jnp.full((C,), 1.0 / C)
+    team = jnp.ones((C,))
+    jaxpr = jax.make_jaxpr(backward_and_agg)(params, batch, w, team)
+
+    shard_maps = [(j, e) for j, e in _all_eqns(jaxpr.jaxpr)
+                  if e.primitive.name == "shard_map"]
+    assert len(shard_maps) == 1
+    j, eqn = shard_maps[0]
+    producers = {id(ov): e2 for e2 in j.eqns for ov in e2.outvars}
+    checked = 0
+    for iv in eqn.invars:
+        shape = getattr(iv.aval, "shape", ())
+        if len(shape) != 3:
+            continue                     # (C,) weights/mask ride replicated
+        prod = producers.get(id(iv))
+        assert prod is not None and prod.primitive.name == \
+            "sharding_constraint", (shape, prod and prod.primitive.name)
+        expected, _ = sh.client_flat_specs([shape[-1]], mesh, ("data",))
+        assert prod.params["sharding"].spec == expected[0], shape
+        checked += 1
+    assert checked >= 4                  # every grad leaf crosses constrained
+
+    txt = jax.jit(backward_and_agg).lower(params, batch, w, team) \
+        .compile().as_text()
+    assert "all-to-all" not in txt
+
+
+@multidevice
+def test_pod_run_prefetch_stages_per_shard_and_matches_python():
+    """Sharding-aware prefetch (ROADMAP open item 3): pod.run's scan
+    driver stages each chunk's batches DIRECTLY onto their pod shards
+    (device_put with the lifted NamedSharding), and the sharded-staged
+    scan history stays bit-for-bit equal to the python per-round loop fed
+    the same shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import ARCHS
+    from repro.core import driver, pod
+    from repro.launch import inputs
+    from repro.launch.train import synthetic_lm_batches
+    from repro.models import transformer
+    from repro.optim import optimizers
+
+    CFG = ARCHS["tiny-lm"].replace(n_layers=2, d_model=64, n_heads=4,
+                                   n_kv_heads=2, d_ff=128, vocab_size=128,
+                                   head_dim=16)
+    C, B, S = 4, 8, 32
+    mesh = _mesh((jax.device_count(),), ("data",))
+
+    def setup(seed=0):
+        key = jax.random.PRNGKey(seed)
+        fed = FedConfig(n_clients=C)
+        tc = TrainConfig(global_batch=B, seq_len=S, lr=1e-2,
+                         warmup_steps=2, total_steps=8)
+        params = transformer.init_transformer(key, CFG)
+        opt_init, _ = optimizers.make_optimizer(tc)
+        state = pod.init_pod_state(params, opt_init, C, fed, key)
+        step = pod.make_train_step(CFG, fed, tc)
+        sampler = synthetic_lm_batches(CFG, tc, C, seed)
+        return key, state, step, sampler
+
+    key, state_sc, step, sampler = setup()
+    _, state_py, _, _ = setup()
+    sample_key = jnp.array(np.asarray(key))
+
+    def batch_fn(t):
+        return sampler(jax.random.fold_in(sample_key, t))
+
+    batch_sh = inputs.batch_shardings(
+        jax.eval_shape(sampler, jax.random.PRNGKey(0)), mesh)
+    assert batch_sh["tokens"].spec == P(("data",), None)
+
+    # staging lands on the shards, leading chunk dim replicated
+    lifted = driver.chunk_sharding(batch_sh)
+    _, stacked = driver.stage_chunk(batch_fn, [0, 1, 2], lifted)
+    assert stacked["tokens"].shape == (3, B, S)
+    assert stacked["tokens"].sharding == lifted["tokens"]
+    assert len(stacked["tokens"].sharding.device_set) == jax.device_count()
+
+    s_sc, h_sc = pod.run(state_sc, step, batch_fn, 5, driver="scan",
+                         chunk_rounds=2, batch_sharding=batch_sh)
+    s_py, h_py = pod.run(state_py, step, batch_fn, 5, driver="python",
+                         batch_sharding=batch_sh)
+    assert len(h_sc) == len(h_py) == 5
+    for r_py, r_sc in zip(h_py, h_sc):
+        for k in r_py:
+            np.testing.assert_array_equal(
+                np.asarray(r_py[k]), np.asarray(r_sc[k]),
+                err_msg=f"step {r_py['step']} key {k}")
+    for a, b in zip(jax.tree_util.tree_leaves(s_py.params),
+                    jax.tree_util.tree_leaves(s_sc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @multidevice
 def test_pod_per_client_sharded_matches_replicated():
     """One pod train step with robust='per_client': the mesh-sharded
