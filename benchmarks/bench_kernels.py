@@ -10,6 +10,10 @@ engine against the PR-1 flatten path on a multi-leaf tree, and
 ``robust_pipeline/sharded`` the shard_map'd per-client path against the
 replicated one on however many devices exist (the CI multi-device job
 forces 4 host devices), recording the parity gap vs the XLA oracle.
+``comm/*`` records the compressed-transport subsystem (repro/comm):
+per-codec encode+decode wall and measured bytes-on-wire per round vs the
+dense uplink, and the int8 fused dequant-into-aggregation kernels vs the
+dense fused engine (agg-byte reduction ~4x at qblk=128).
 Results are also dumped to BENCH_kernels.json (the perf trajectory
 artifact CI uploads every run).
 """
@@ -216,6 +220,66 @@ def run(budget="small"):
             "hbm_passes_fused": roof["hbm_passes_fused"],
         })
 
+    # ---- comm codecs: wire bytes + encode/decode wall + fused dequant --
+    # same multi-leaf tree as the leafwise section; bytes are MEASURED
+    # from the encoded arrays (codes + scales + indices), not modelled
+    from repro.comm import codecs as comm_codecs
+    from repro.comm.kernels import comm_codecs as dq
+
+    dense_pc = comm_codecs.dense_bytes_per_client(ltree)
+    codec_names = ["int8", "topk"] if budget == "small" else \
+        ["int8", "int4", "signsgd", "topk"]
+    int8_enc, int8_codec = None, None
+    for name in codec_names:
+        codec = comm_codecs.Codec(name, qblk=128, topk_frac=0.05)
+        enc_fn = jax.jit(codec.encode_tree)
+        dec_fn = jax.jit(lambda e: codec.decode_tree(e, ltree))
+        enc = enc_fn(ltree)
+        if name == "int8":
+            int8_enc, int8_codec = enc, codec
+        t_enc = _time(lambda: enc_fn(ltree))
+        t_dec = _time(lambda: dec_fn(enc))
+        wire_pc = comm_codecs.wire_bytes_per_client(enc)
+        out.append({
+            "name": f"comm/{name}/roundtrip/C{C}/N{n_tot}",
+            "wall_s": t_enc + t_dec,
+            "wall_s_encode": t_enc, "wall_s_decode": t_dec,
+            "wire_bytes_per_client": wire_pc,
+            "dense_bytes_per_client": dense_pc,
+            "wire_reduction": dense_pc / wire_pc,
+            # one cohort's uplink per round, on the wire
+            "bytes_on_wire_per_round": wire_pc * C,
+        })
+
+    # fused dequant-into-aggregation vs the dense fused engine: the
+    # aggregation passes stream int8 codes + scales (~C*N*(1 + 4/qblk)
+    # bytes/pass) instead of C*N*4 — wall measured, bytes analytic
+    for agg in aggs:
+        cfg = FedConfig(n_clients=C, aggregator=agg, compress="int8")
+        dq_fn = jax.jit(lambda e, w, m, cfg=cfg: dq.fused_dequant_aggregate_tree(
+            e, w, m, cfg, like=ltree))
+        t_dense, t_dq = float("inf"), float("inf")
+        for _ in range(5):                         # interleaved (see above)
+            t_dense = min(t_dense, _time(
+                lambda: fused_aggregate_tree(ltree, pw, pmask, cfg),
+                reps=1))
+            t_dq = min(t_dq, _time(lambda: dq_fn(int8_enc, pw, pmask),
+                                   reps=1))
+        roof = robust_pipeline_roofline(C, n_tot, agg)
+        passes = roof["hbm_passes_fused"]
+        bytes_dq = passes * C * n_tot * (1.0 + 4.0 / int8_codec.qblk)
+        out.append({
+            "name": f"comm/fused_dequant/{agg}/C{C}/N{n_tot}",
+            "wall_s": t_dq, "wall_s_dense_fused": t_dense,
+            "speedup_vs_dense_fused": t_dense / t_dq,
+            "hbm_passes_fused": passes,
+            "agg_bytes_dense": roof["bytes_fused"],
+            "agg_bytes_dequant": bytes_dq,
+            "agg_bytes_reduction": roof["bytes_fused"] / bytes_dq,
+            "bytes_on_wire_per_round":
+                comm_codecs.wire_bytes_per_client(int8_enc) * C,
+        })
+
     out.append(bench_pod_scan_driver())
     return out
 
@@ -302,6 +366,13 @@ def main(budget="small"):
             extra = (f"speedup_vs_replicated="
                      f"{r['speedup_vs_replicated']:.2f}x dev={r['devices']} "
                      f"parity={r['parity_max_abs_diff']:.1e}")
+        elif "speedup_vs_dense_fused" in r:
+            extra = (f"speedup_vs_dense_fused="
+                     f"{r['speedup_vs_dense_fused']:.2f}x "
+                     f"agg_bytes_x{r['agg_bytes_reduction']:.1f}")
+        elif "wire_reduction" in r:
+            extra = (f"wire_x{r['wire_reduction']:.1f} "
+                     f"bytes/round={r['bytes_on_wire_per_round']:.0f}")
         elif "speedup_vs_python" in r:
             extra = (f"speedup_vs_python={r['speedup_vs_python']:.2f}x "
                      f"syncs={r['host_syncs_scan']}"

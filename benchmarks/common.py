@@ -60,6 +60,8 @@ def run_fl(model, fed, eval_fn, *, algo="fedfits", rounds=15, n_clients=10,
             (i + 1 for i, a in enumerate(accs) if a >= 0.9 * max(accs)),
             rounds),
         "cost_client_rounds": float(state.cost_client_rounds),
+        "cost_bytes_up": float(state.cost_bytes_up),
+        "cost_bytes_down": float(state.cost_bytes_down),
         "participation_pct": 100.0 * float(
             (state.cum_selected > 0).mean()),
         "wall_s": round(wall, 2),

@@ -1,0 +1,1 @@
+"""Pallas kernels of the compressed-transport subsystem."""

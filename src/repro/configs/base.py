@@ -178,6 +178,16 @@ class FedConfig:
                                       # None -> autotuned from backend +
                                       # VMEM budget (robust_pipeline.auto_blk)
     paper_exact_agg: bool = False     # reproduce Algorithm 1's n_k/|S_t| literal
+    # compressed client->server transport (repro/comm/)
+    compress: str = "none"            # none|int8|int4|signsgd|topk|randk
+    compress_qblk: int = 128          # quant-block width (per-block scales)
+    compress_topk_frac: float = 0.05  # top-k kept fraction per leaf
+    error_feedback: bool = True       # EF residual (carried in the scan
+                                      # carry) re-injects compression error
+    fused_dequant: bool = True        # int8: aggregate straight from the
+                                      # wire codes (dequant in VMEM inside
+                                      # the fused Eq.-11 kernels; False ->
+                                      # decode-then-aggregate oracle)
     # selection algorithm: fedfits|fedavg|fedrand|fedpow
     algorithm: str = "fedfits"
     prox_mu: float = 0.0              # FedProx proximal term (baseline from

@@ -51,9 +51,8 @@ def sign_flip(updates, malicious, *, scale=1.0):
 
 def gaussian_update(updates, malicious, sigma, rng):
     """Replace malicious updates with pure noise."""
-    leaves = jax.tree_util.tree_leaves(updates)
-    keys = jax.random.split(rng, len(leaves))
     flat, treedef = jax.tree_util.tree_flatten(updates)
+    keys = jax.random.split(rng, len(flat))
 
     out = []
     for l, k in zip(flat, keys):

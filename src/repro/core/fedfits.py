@@ -12,6 +12,13 @@ SPMD-uniform), but only clients Algorithm 1 would actually train are
 counted in the communication/compute cost metrics — `cost_client_rounds`
 matches the paper's accounting (FFA rounds bill all clients, slot rounds
 bill only the team).
+
+Transport: with `FedConfig.compress` the client->server boundary runs
+through the comm subsystem (repro/comm/) — updates cross the wire
+encoded (EF residuals in the scan carry), the int8 path aggregates
+straight from the codes (fused dequant kernels), and
+`cost_bytes_up/down` bill the MEASURED wire sizes instead of an
+analytic 2*|params|*4 model.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import codecs as comm_codecs, error_feedback
 from repro.core import aggregation, attacks, driver as scan_driver, fitness, \
     selection, slots
 
@@ -35,9 +43,18 @@ class FedState(NamedTuple):
     round: jnp.ndarray        # t (1-indexed)
     cum_selected: jnp.ndarray  # (K,) times each client entered S_t
     cost_client_rounds: jnp.ndarray  # billed client-rounds (cost model)
+    cost_bytes_up: jnp.ndarray    # MEASURED uplink bytes (encoded sizes)
+    cost_bytes_down: jnp.ndarray  # MEASURED downlink bytes (dense model)
+    ef: Any = None            # per-client EF residual (compress != none)
 
 
 def init_state(params, n_clients, fed_cfg, rng):
+    ef = None
+    if getattr(fed_cfg, "compress", "none") != "none" \
+            and fed_cfg.error_feedback:
+        # (K, ...) residual matching the update tree the clients produce
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n_clients,) + p.shape, p.dtype), params)
     return FedState(
         params=params,
         team=jnp.ones((n_clients,), jnp.float32),
@@ -49,6 +66,9 @@ def init_state(params, n_clients, fed_cfg, rng):
         round=jnp.int32(1),
         cum_selected=jnp.zeros((n_clients,), jnp.float32),
         cost_client_rounds=jnp.float32(0.0),
+        cost_bytes_up=jnp.float32(0.0),
+        cost_bytes_down=jnp.float32(0.0),
+        ef=ef,
     )
 
 
@@ -93,6 +113,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
     client_update = make_client_update(model, fed_cfg)
     K = fed_cfg.n_clients
     mal = malicious if malicious is not None else jnp.zeros((K,), jnp.float32)
+    codec = comm_codecs.make_codec(fed_cfg)
 
     def round_fn(state: FedState, data):
         """data: client-stacked {x:(K,B,...), y:(K,B), eval_x, eval_y, n:(K,)}
@@ -114,6 +135,25 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
 
         if update_attack is not None:
             updates = update_attack(updates, mal, r_upd)
+
+        # ---- client->server transport (repro/comm/) ---------------------
+        # the codec runs CLIENT-side, after the attacker corrupted its own
+        # update: only the encoded wire format crosses the boundary, and
+        # only its measured bytes are billed.  EF residuals re-inject last
+        # round's compression error before encoding.
+        enc, new_ef = None, state.ef
+        if codec is not None:
+            enc, dec, new_ef = error_feedback.compress(
+                codec, updates, state.ef,
+                # fold_in, not split: the existing rng streams (and with
+                # them the compress="none" histories) stay untouched
+                rng=jax.random.fold_in(r_upd, 7) if codec.stochastic
+                else None)
+            bytes_up_pc = comm_codecs.wire_bytes_per_client(enc)
+            updates = dec
+        else:
+            bytes_up_pc = comm_codecs.dense_bytes_per_client(updates)
+        bytes_down_pc = comm_codecs.param_bytes(state.params)
 
         # ---- fitness ----------------------------------------------------
         q = fitness.data_quality(data["n"], avail)
@@ -163,8 +203,18 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         else:
             weights = data["n"].astype(jnp.float32) * state.trust \
                 * (team + stale)
-            agg = aggregation.aggregate(
-                updates, weights, (part > 0).astype(jnp.float32), fed_cfg)
+            part_mask = (part > 0).astype(jnp.float32)
+            from repro.comm.kernels import comm_codecs as dq
+            if enc is not None and dq.should_fuse(codec, fed_cfg, updates):
+                # server aggregates STRAIGHT from the int8 wire codes:
+                # dequant happens in VMEM inside the fused Eq.-11 passes
+                # (bit-identical to aggregating `dec`; ~4x less agg HBM)
+                agg = dq.fused_dequant_aggregate_tree(
+                    enc, weights, part_mask, fed_cfg, like=updates,
+                    blk=getattr(fed_cfg, "agg_blk", None))
+            else:
+                agg = aggregation.aggregate(updates, weights, part_mask,
+                                            fed_cfg)
         new_params = jax.tree_util.tree_map(
             lambda p, u: p + u.astype(p.dtype), state.params, agg)
 
@@ -180,7 +230,10 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         # clients: they went unavailable but still trained and submitted
         # an update at stale_weight, so their client-round is real work.
         # The paper-exact branch weighs by n_k * team only (no stale
-        # contribution enters the aggregate), so nothing extra is billed
+        # contribution enters the aggregate), so nothing extra is billed.
+        # Bytes are MEASURED, not modelled: every billed client-round
+        # moves one dense model down and one ENCODED update up (the
+        # actual wire sizes — dtype itemsizes, codes, scales, indices)
         billed = jnp.where(state.h, avail.sum(), team.sum())
         if not fed_cfg.paper_exact_agg:
             billed = billed + (stale > 0).sum()
@@ -188,7 +241,10 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             params=new_params, team=team, trust=new_trust, alpha=alpha,
             slot=new_slot, h=h_next, rng=rng, round=t + 1,
             cum_selected=state.cum_selected + team,
-            cost_client_rounds=state.cost_client_rounds + billed)
+            cost_client_rounds=state.cost_client_rounds + billed,
+            cost_bytes_up=state.cost_bytes_up + billed * bytes_up_pc,
+            cost_bytes_down=state.cost_bytes_down + billed * bytes_down_pc,
+            ef=new_ef)
         metrics = {
             "theta": th, "score": scores, "team": team, "alpha": alpha,
             "theta_team": theta_team, "h_next": h_next,

@@ -40,6 +40,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import codecs as comm_codecs, error_feedback
 from repro.core import aggregation, driver as scan_driver, fitness, \
     selection, slots
 from repro.models import transformer
@@ -55,6 +56,7 @@ class PodFedState(NamedTuple):
     rng: jnp.ndarray
     round: jnp.ndarray
     cum_selected: jnp.ndarray
+    ef: Any = None             # per-client-group EF residual (compress on)
 
 
 class PodState(NamedTuple):
@@ -65,6 +67,13 @@ class PodState(NamedTuple):
 
 
 def init_pod_state(params, opt_init, C, fed_cfg, rng):
+    ef = None
+    if getattr(fed_cfg, "compress", "none") != "none" \
+            and fed_cfg.error_feedback:
+        # (C, ...) residual matching the per-client grad tree of the
+        # robust='per_client' path — rides the ScanDriver donated carry
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((C,) + p.shape, p.dtype), params)
     return PodState(
         params=params,
         opt_state=opt_init(params),
@@ -77,6 +86,7 @@ def init_pod_state(params, opt_init, C, fed_cfg, rng):
             rng=rng,
             round=jnp.int32(1),
             cum_selected=jnp.zeros((C,), jnp.float32),
+            ef=ef,
         ),
         step=jnp.int32(0),
     )
@@ -136,6 +146,12 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
     """
     C = fed_cfg.n_clients
     opt_init, opt_update = optimizers.make_optimizer(train_cfg)
+    codec = comm_codecs.make_codec(fed_cfg)
+    if codec is not None and robust != "per_client":
+        raise ValueError(
+            "FedConfig.compress needs robust='per_client': the weighted-"
+            "backward path fuses aggregation into the backward pass, so "
+            "no per-client update ever crosses a client->server boundary")
 
     def weighted_loss(params, batch, weights):
         loss_c, acc_c, aux = per_client_metrics(params, model_cfg, batch, C)
@@ -159,6 +175,8 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
         fed = state.fed
         rng, r_sel = jax.random.split(fed.rng)
         t = fed.round
+        new_ef = fed.ef
+        bytes_up_pc = None
 
         # ---- round weights: team * trust * equal-size q (selection-aware) --
         w = fed.team * fed.trust
@@ -197,7 +215,28 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
                 return g, l, m["acc"]
 
             grads_c, loss_c, acc_c = jax.vmap(client_grad)(jnp.arange(C))
-            if agg_mesh is not None and getattr(fed_cfg, "fused_agg", True):
+            enc = None
+            if codec is not None:
+                # client->server boundary: EF inject -> encode; only the
+                # wire format reaches the server-side aggregation below
+                enc, dec, new_ef = error_feedback.compress(
+                    codec, grads_c, fed.ef,
+                    rng=jax.random.fold_in(rng, 7) if codec.stochastic
+                    else None)
+                bytes_up_pc = comm_codecs.wire_bytes_per_client(enc)
+                grads_c = dec
+            from repro.comm.kernels import comm_codecs as dq
+            if enc is not None and dq.should_fuse(codec, fed_cfg, grads_c):
+                if agg_mesh is not None:
+                    grads = dq.fused_dequant_aggregate_sharded(
+                        enc, w, fed.team, fed_cfg, agg_mesh, like=grads_c,
+                        axes=agg_axes)
+                else:
+                    grads = dq.fused_dequant_aggregate_tree(
+                        enc, w, fed.team, fed_cfg, like=grads_c,
+                        blk=getattr(fed_cfg, "agg_blk", None))
+            elif agg_mesh is not None and getattr(fed_cfg, "fused_agg",
+                                                  True):
                 grads = aggregation.aggregate_sharded(
                     grads_c, w, fed.team, fed_cfg, agg_mesh, axes=agg_axes)
             else:
@@ -256,13 +295,17 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
             params=new_params, opt_state=new_opt,
             fed=PodFedState(team=team, trust=new_trust, alpha=alpha,
                             slot=new_slot, h=h_next, rng=rng, round=t + 1,
-                            cum_selected=fed.cum_selected + team),
+                            cum_selected=fed.cum_selected + team,
+                            ef=new_ef),
             step=state.step + 1)
         metrics = {
             "loss": jnp.sum(w * loss_c), "acc": jnp.sum(w * acc_c),
             "grad_norm": gnorm, "theta_team": theta_team,
             "team_size": team.sum(), "alpha": alpha,
         }
+        if bytes_up_pc is not None:
+            # measured uplink bytes this round (encoded wire sizes)
+            metrics["comm_bytes_up"] = jnp.float32(bytes_up_pc * C)
         return new_state, metrics
 
     return train_step

@@ -71,6 +71,13 @@ def main():
                     help="per_client: coordinate-robust aggregation over "
                          "per-client grads, mesh-sharded along the "
                          "flattened param axis")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "int4", "signsgd", "topk"],
+                    help="client->server transport codec (repro/comm/): "
+                         "per-client grads cross the boundary encoded, "
+                         "with EF residuals in the scan carry; int8 "
+                         "aggregates straight from the wire codes "
+                         "(fused dequant). Requires --robust per_client")
     ap.add_argument("--driver", default="scan", choices=["scan", "python"],
                     help="scan: chunked lax.scan rounds (donated carry, "
                          "sharding-aware batch prefetch); python: the "
@@ -81,7 +88,10 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    fed = FedConfig(n_clients=args.clients)
+    if args.compress != "none" and args.robust != "per_client":
+        ap.error("--compress needs --robust per_client (only that path "
+                 "moves per-client updates across the wire)")
+    fed = FedConfig(n_clients=args.clients, compress=args.compress)
     tc = TrainConfig(global_batch=args.global_batch, seq_len=args.seq,
                      lr=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1))

@@ -209,19 +209,22 @@ def cache_specs(cache: Any, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(spec_for, cache)
 
 
-def client_flat_specs(sizes, mesh, axes=("data", "model")):
+def client_flat_specs(sizes, mesh, axes=("data", "model"), align=1):
     """PartitionSpecs for the (1, C, n_l)-flattened per-client update
     leaves of the sharded robust-aggregation path
     (``aggregation.aggregate_sharded``): the flattened param axis shards
     over ``axes`` when its size divides the combined axis extent, else the
     leaf stays replicated (small norm/bias leaves — the fused pipeline
-    de-duplicates them before its psum).  Returns (specs, sharded_flags).
-    """
+    de-duplicates them before its psum).  ``align`` additionally requires
+    every SHARD to be a multiple of that many coordinates — the
+    fused-dequant path passes its quant-block width so each device's code
+    shard carries exactly its own scale columns.  Returns
+    (specs, sharded_flags)."""
     axes = tuple(axes)
     size = _axis_size(mesh, axes)
     specs, flags = [], []
     for n in sizes:
-        if n >= size and n % size == 0:
+        if n >= size and n % (size * align) == 0:
             specs.append(P(None, None, axes))
             flags.append(True)
         else:

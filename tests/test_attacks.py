@@ -1,0 +1,85 @@
+"""Model/data-poisoning attack models (core/attacks.py): seeded
+determinism of the stochastic attacks and the honest-rows-untouched
+contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attacks
+
+KEY = jax.random.PRNGKey(0)
+K = 6
+MAL = jnp.zeros((K,)).at[jnp.arange(2)].set(1.0)
+
+
+def _updates(key=KEY):
+    return {"w": jax.random.normal(key, (K, 17, 3)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (K, 5))}
+
+
+def test_gaussian_update_seeded_determinism():
+    upd = _updates()
+    a = attacks.gaussian_update(upd, MAL, 2.0, jax.random.PRNGKey(3))
+    b = attacks.gaussian_update(upd, MAL, 2.0, jax.random.PRNGKey(3))
+    c = attacks.gaussian_update(upd, MAL, 2.0, jax.random.PRNGKey(4))
+    for k in upd:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+        # a different seed draws different noise on the malicious rows
+        assert not np.allclose(np.asarray(a[k][:2]), np.asarray(c[k][:2]))
+
+
+def test_gaussian_update_leaves_honest_rows_untouched():
+    upd = _updates()
+    out = attacks.gaussian_update(upd, MAL, 2.0, jax.random.PRNGKey(3))
+    for k in upd:
+        np.testing.assert_array_equal(np.asarray(out[k][2:]),
+                                      np.asarray(upd[k][2:]))
+        assert not np.allclose(np.asarray(out[k][:2]),
+                               np.asarray(upd[k][:2]))
+
+
+def test_gaussian_update_distinct_noise_per_leaf():
+    """Each leaf draws from its own key: the (K, 5) slice of one leaf
+    must not reuse another leaf's noise stream."""
+    upd = {"x": jnp.zeros((K, 5)), "y": jnp.zeros((K, 5))}
+    out = attacks.gaussian_update(upd, jnp.ones((K,)), 1.0,
+                                  jax.random.PRNGKey(3))
+    assert not np.allclose(np.asarray(out["x"]), np.asarray(out["y"]))
+
+
+def test_sign_flip_and_scale_attack_deterministic():
+    upd = _updates()
+    for fn in [lambda u: attacks.sign_flip(u, MAL, scale=3.0),
+               lambda u: attacks.scale_attack(u, MAL, 5.0)]:
+        a, b = fn(upd), fn(upd)
+        for k in upd:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+            np.testing.assert_array_equal(np.asarray(a[k][2:]),
+                                          np.asarray(upd[k][2:]))
+
+
+def test_sign_flip_flips_only_malicious():
+    upd = _updates()
+    out = attacks.sign_flip(upd, MAL, scale=1.0)
+    for k in upd:
+        np.testing.assert_allclose(np.asarray(out[k][:2]),
+                                   -np.asarray(upd[k][:2]), rtol=1e-6)
+
+
+def test_label_flip_modes():
+    y = jnp.arange(K * 4).reshape(K, 4) % 10
+    shift = attacks.label_flip(y, 10, MAL, mode="shift")
+    np.testing.assert_array_equal(np.asarray(shift[:2]),
+                                  (np.asarray(y[:2]) + 1) % 10)
+    np.testing.assert_array_equal(np.asarray(shift[2:]), np.asarray(y[2:]))
+    target = attacks.label_flip(y, 10, MAL, mode="target")
+    assert np.all(np.asarray(target[:2]) == 0)
+
+
+def test_feature_noise_seeded_determinism():
+    x = jax.random.normal(KEY, (K, 8, 8, 1))
+    a = attacks.feature_noise(x, MAL, 0.5, jax.random.PRNGKey(5))
+    b = attacks.feature_noise(x, MAL, 0.5, jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a[2:]), np.asarray(x[2:]))
