@@ -1,0 +1,80 @@
+"""Robustness regression matrix: runs the scenario registry (attack x
+heterogeneity x compression x aggregator cells, repro/scenarios/) through
+the SimEngine and merges one ``robustness/<cell>`` row per scenario into
+BENCH_kernels.json next to the kernel-perf trajectory.
+
+  PYTHONPATH=src python -m benchmarks.bench_scenarios [--grid] [--only X]
+
+Budget small runs the curated cells at smoke sizes; ``--grid`` (the CI
+scenario-matrix job) runs the generated {gate_aware, alie, none} x
+{trimmed_mean, krum, fedavg} x {dropout on/off} smoke grid instead.
+Rows replace same-name rows from earlier runs; every other row in the
+JSON (kernel timings, other robustness cells) is preserved.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import common
+from repro.scenarios import SCENARIOS, run_scenario, smoke_grid
+
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+SIZES = {
+    "small": dict(n_rounds=6, n=800),
+    "full": dict(n_rounds=12, n=1600),
+}
+
+
+def merge_rows(rows, path=None):
+    """Replace same-name rows in the BENCH json, preserve everything else."""
+    path = path or BENCH_JSON
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    new_names = {r["name"] for r in rows}
+    merged = [r for r in existing
+              if r.get("name") not in new_names] + rows
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+    return merged
+
+
+def run_cells(cells, *, n_rounds, n, seed=0):
+    rows = []
+    for name in cells:
+        summary, _ = run_scenario(name, n_rounds=n_rounds, n=n, seed=seed)
+        rows.append(summary)
+        common.csv_row(
+            summary["name"], summary["wall_s"],
+            f"final_acc={summary['final_acc']:.3f} "
+            f"best={summary['best_acc']:.3f} "
+            f"trig={summary['final_trigger_acc']:.3f} "
+            f"gini={summary['fair_part_gini']:.2f}")
+    return rows
+
+
+def main(budget="small", grid=False, only=None):
+    cells = smoke_grid() if grid else SCENARIOS
+    names = [c for c in cells if only is None or only in c]
+    rows = run_cells(names, **SIZES[budget])
+    merged = merge_rows(rows)
+    print(f"# wrote {BENCH_JSON} ({len(rows)} robustness rows, "
+          f"{len(merged)} total)", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small", choices=["small", "full"])
+    ap.add_argument("--grid", action="store_true",
+                    help="run the CI smoke grid instead of the curated "
+                         "scenario cells")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    main(budget=args.budget, grid=args.grid, only=args.only)

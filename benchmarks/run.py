@@ -19,6 +19,9 @@ BENCHES = [
     ("fig10_dynamic_alpha", "benchmarks.bench_fig10_dynamic_alpha"),
     ("communication", "benchmarks.bench_communication"),
     ("kernels", "benchmarks.bench_kernels"),
+    # after kernels: bench_kernels rewrites the JSON wholesale, scenarios
+    # merge their robustness/* rows into it
+    ("scenarios", "benchmarks.bench_scenarios"),
 ]
 
 

@@ -72,6 +72,27 @@ for comp in ["none", "int8"]:
           f"downlink={float(state.cost_bytes_down) / 1e6:.2f} MB "
           f"(client-rounds {float(state.cost_client_rounds):.0f})")
 
+# ---- named cells from the robustness scenario registry -----------------
+# the scenario engine (repro/scenarios/) runs curated attack x fault x
+# compression x aggregator cells through the exact same round loop and
+# reports fairness (worst-decile accuracy, per-client accuracy variance,
+# participation Gini) and backdoor trigger accuracy next to plain
+# accuracy — trigger accuracy is tracked for EVERY cell; for
+# non-backdoor cells it sits at the target-class base rate, which is the
+# regression signal
+from repro.scenarios import run_scenario
+
+print("\nscenario registry cells (fairness + trigger-accuracy table):")
+print(f"{'cell':20s} {'best':>6s} {'final':>6s} {'trig':>6s} "
+      f"{'worst10%':>8s} {'acc_var':>8s} {'gini':>5s} {'gated':>6s}")
+for cell in ["clean_trimmed", "alie_fedavg", "alie_trimmed",
+             "gate_aware_trimmed", "backdoor_trimmed", "dropout_trimmed"]:
+    s, _ = run_scenario(cell, n_clients=K, n_rounds=8, n=800)
+    print(f"{cell:20s} {s['best_acc']:6.3f} {s['final_acc']:6.3f} "
+          f"{s['final_trigger_acc']:6.3f} {s['fair_worst_decile']:8.3f} "
+          f"{s['fair_acc_var']:8.4f} {s['fair_part_gini']:5.2f} "
+          f"{s['gated_frac_mean']:6.2f}")
+
 # ---- the Pallas kernel on one poisoned round of updates ----------------
 key = jax.random.PRNGKey(3)
 honest = {"w": jax.random.normal(key, (K, 512)) * 0.01 + 1.0}

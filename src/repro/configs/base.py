@@ -166,7 +166,13 @@ class FedConfig:
     participation_floor: float = 0.0  # A4: Pr(i in S_t) >= p_min (quota)
     explore_eps: float = 0.0          # explore-exploit: eps-greedy inclusion
     # trust & robustness
-    trust_decay: float = 0.9          # EWMA trust update
+    trust_decay: float = 0.9          # EWMA decay for BOTH trust tracks:
+                                      # aggregation trust (score-driven) and
+                                      # gate_trust (cosine-gate rejections)
+    trust_in_fitness: bool = True     # fold the gate_trust EWMA into the
+                                      # fitness scores (paper's "dynamic
+                                      # client scoring"); behavior-preserving
+                                      # while no client is ever gated
     cosine_outlier_thresh: float = -0.5   # gradient-cosine outlier gate
     aggregator: str = "fedavg"        # fedavg|median|trimmed_mean|krum
     trim_frac: float = 0.2            # trimmed-mean fraction per side

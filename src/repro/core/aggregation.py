@@ -127,9 +127,9 @@ def krum(updates, mask, f, *, multi_m=1):
     return weighted_mean(updates, sel, sel)
 
 
-def cosine_outlier_mask(updates, ref, mask, thresh):
-    """Gate clients whose update has cosine similarity < thresh vs. a
-    reference direction (e.g. the trust-weighted mean). Returns 0/1 (K,)."""
+def cosine_to_ref(updates, ref):
+    """Tree-wide cosine similarity (K,) of each client's update vs. a
+    reference direction pytree (one streaming pass, no sort)."""
     def dot_leaf(leaf, rleaf):
         f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
         r = rleaf.reshape(-1).astype(jnp.float32)
@@ -140,7 +140,13 @@ def cosine_outlier_mask(updates, ref, mask, thresh):
                            jax.tree_util.tree_leaves(ref)):
         d, a, b = dot_leaf(leaf, rleaf)
         dots, n1, n2 = dots + d, n1 + a, n2 + b
-    cos = dots / jnp.maximum(jnp.sqrt(n1 * n2), 1e-12)
+    return dots / jnp.maximum(jnp.sqrt(n1 * n2), 1e-12)
+
+
+def cosine_outlier_mask(updates, ref, mask, thresh):
+    """Gate clients whose update has cosine similarity < thresh vs. a
+    reference direction (e.g. the trust-weighted mean). Returns 0/1 (K,)."""
+    cos = cosine_to_ref(updates, ref)
     return ((cos >= thresh) & (mask > 0)).astype(jnp.float32)
 
 

@@ -1,0 +1,62 @@
+"""Fairness reporting for the round metrics (the central theme of both
+Annapareddy healthcare-FL papers, PAPERS.md): how evenly does the global
+model serve the client population, and how evenly does the scheduler
+spread participation?
+
+All metrics are pure jnp (they ride the scan carry's metric history) and
+mask-aware — unavailable clients never contribute:
+
+  accuracy_variance    Var_k[acc_k] over available clients (the global
+                       model's per-client accuracy spread).
+  worst_decile         mean accuracy of the worst ceil(0.1 * n_avail)
+                       clients — the tail the variance hides.
+  participation_gini   Gini coefficient of cumulative selection counts
+                       (0 = perfectly even participation, -> 1 = a few
+                       clients monopolise the slots).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def accuracy_variance(acc, mask=None):
+    """Variance of per-client accuracy over masked-in clients."""
+    if mask is None:
+        mask = jnp.ones_like(acc)
+    n = jnp.maximum(mask.sum(), 1.0)
+    mu = (acc * mask).sum() / n
+    return (mask * jnp.square(acc - mu)).sum() / n
+
+
+def worst_decile(acc, mask=None):
+    """Mean accuracy of the bottom ceil(10%) of masked-in clients."""
+    if mask is None:
+        mask = jnp.ones_like(acc)
+    n = mask.sum()
+    d = jnp.maximum(jnp.ceil(0.1 * n), 1.0)
+    vals = jnp.sort(jnp.where(mask > 0, acc, jnp.inf))
+    take = (jnp.arange(acc.shape[0], dtype=jnp.float32) < d).astype(
+        jnp.float32)
+    worst = (jnp.where(jnp.isfinite(vals), vals, 0.0) * take).sum() / d
+    return jnp.where(n > 0, worst, 0.0)
+
+
+def participation_gini(cum_selected):
+    """Gini coefficient of the per-client cumulative selection counts."""
+    x = jnp.sort(cum_selected.astype(jnp.float32))
+    n = jnp.float32(x.shape[0])
+    tot = x.sum()
+    i = jnp.arange(1, x.shape[0] + 1, dtype=jnp.float32)
+    g = 2.0 * (i * x).sum() / (n * jnp.maximum(tot, _EPS)) - (n + 1.0) / n
+    return jnp.where(tot > 0, g, 0.0)
+
+
+def round_fairness(acc, avail, cum_selected):
+    """The per-round fairness block of the metrics dict."""
+    return {
+        "fair_acc_var": accuracy_variance(acc, avail),
+        "fair_worst_decile": worst_decile(acc, avail),
+        "fair_part_gini": participation_gini(cum_selected),
+    }

@@ -1,0 +1,102 @@
+"""System-heterogeneity fault injection for the round loop (ROADMAP
+item 5 / scenario engine): stragglers, mid-round dropout, partial work.
+
+All faults are sampled INSIDE ``make_round`` from keys folded off the
+round's own rng streams, so they live entirely in the scan carry — the
+chunked scan driver and the per-round python loop stay bit-for-bit
+equal with fault injection on, and an inactive ``FaultConfig()`` is
+bit-identical to ``faults=None`` (every sampler is skipped, not fed
+zero probabilities).
+
+Fault semantics (and how they thread into the existing machinery):
+
+  stragglers    per-client exponential delay vs a round deadline; a late
+                client simply never arrives -> its availability bit
+                drops, which composes with the whole availability path:
+                selection masks, fitness masks, and ``stale_weight``
+                catch-up (a slot-team member that straggles re-enters at
+                stale weight next round, exactly like any other
+                unavailability).  Delay SCALES are heterogeneous per
+                client: the last ``ceil(straggler_frac * K)`` clients
+                are chronic stragglers with mean ``straggler_delay``;
+                the rest draw at ``base_delay`` (malicious clients are
+                conventionally the FIRST rows, so the two populations
+                stay disjoint by default).
+  dropout       mid-round loss: a SELECTED client computes its update
+                (and is therefore still billed its client-round and its
+                measured uplink bytes — the loss is at the server side
+                of the wire) but the update never enters the aggregate.
+                Dropped slot-team members are NOT stale catch-up
+                contributors (stale covers clients that never arrived);
+                their update is simply lost.
+  partial work  heterogeneous effective local epochs: client k runs
+                ceil(frac_k * E) of the configured E epochs, frac_k ~
+                U[partial_min_frac, 1] per round.  The vmapped client
+                step still computes all E epochs (SPMD-uniform, same as
+                the availability simulation) but parameter updates stop
+                after the client's effective count.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    dropout_prob: float = 0.0        # P(selected client's update is lost)
+    straggler_frac: float = 0.0      # fraction of chronically slow clients
+    straggler_delay: float = 2.0     # mean delay of slow clients
+    base_delay: float = 0.0          # mean delay of everyone else (0 = never late)
+    deadline: float = 1.0            # round deadline the delay races
+    partial_min_frac: float = 1.0    # effective epochs ~ ceil(U[f,1] * E)
+
+    @property
+    def stragglers_active(self) -> bool:
+        return (self.straggler_frac > 0.0 and self.straggler_delay > 0.0) \
+            or self.base_delay > 0.0
+
+    @property
+    def dropout_active(self) -> bool:
+        return self.dropout_prob > 0.0
+
+    @property
+    def partial_active(self) -> bool:
+        return self.partial_min_frac < 1.0
+
+    @property
+    def active(self) -> bool:
+        return self.stragglers_active or self.dropout_active \
+            or self.partial_active
+
+
+def sample_arrivals(fl: FaultConfig, rng, n_clients: int):
+    """(K,) 0/1 arrival mask: client k arrives iff its exponential delay
+    (mean = its per-client scale) beats the deadline."""
+    k = n_clients
+    if fl.straggler_frac > 0:
+        n_slow = min(max(math.ceil(fl.straggler_frac * k - 1e-9), 1), k)
+    else:
+        n_slow = 0
+    is_slow = (jnp.arange(k) >= (k - n_slow)).astype(jnp.float32)
+    scale = fl.base_delay + (fl.straggler_delay - fl.base_delay) * is_slow
+    u = jax.random.uniform(rng, (k,), minval=1e-7, maxval=1.0)
+    delay = scale * (-jnp.log(u))
+    return (delay <= fl.deadline).astype(jnp.float32)
+
+
+def sample_dropout(fl: FaultConfig, rng, team):
+    """(K,) 0/1 mask of SELECTED clients whose update is lost mid-round."""
+    u = jax.random.uniform(rng, team.shape)
+    return (u < fl.dropout_prob).astype(jnp.float32) * team
+
+
+def sample_epochs(fl: FaultConfig, rng, n_clients: int, local_epochs: int):
+    """(K,) i32 effective local-epoch counts in [1, E]."""
+    frac = jax.random.uniform(
+        rng, (n_clients,), minval=fl.partial_min_frac, maxval=1.0)
+    eff = jnp.ceil(frac * local_epochs).astype(jnp.int32)
+    return jnp.clip(eff, 1, local_epochs)

@@ -28,8 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import codecs as comm_codecs, error_feedback
-from repro.core import aggregation, attacks, driver as scan_driver, fitness, \
-    selection, slots
+from repro.core import aggregation, attacks, driver as scan_driver, \
+    fairness, faults as faults_mod, fitness, selection, slots
 
 
 class FedState(NamedTuple):
@@ -46,6 +46,9 @@ class FedState(NamedTuple):
     cost_bytes_up: jnp.ndarray    # MEASURED uplink bytes (encoded sizes)
     cost_bytes_down: jnp.ndarray  # MEASURED downlink bytes (dense model)
     ef: Any = None            # per-client EF residual (compress != none)
+    gate_trust: Any = None    # (K,) EWMA trust from cosine-gate rejections
+                              # (1.0 = never gated; folds into fitness
+                              # scores when cfg.trust_in_fitness)
 
 
 def init_state(params, n_clients, fed_cfg, rng):
@@ -69,16 +72,25 @@ def init_state(params, n_clients, fed_cfg, rng):
         cost_bytes_up=jnp.float32(0.0),
         cost_bytes_down=jnp.float32(0.0),
         ef=ef,
+        gate_trust=jnp.ones((n_clients,), jnp.float32),
     )
 
 
 def make_client_update(model, fed_cfg):
     """Algorithm 2: E local epochs of SGD from w(t-1); returns the new local
-    params and (GL, GA, LL, LA) evaluated on the client's test split."""
+    params and (GL, GA, LL, LA) evaluated on the client's test split.
 
-    def client_update(params, data, rng):
+    ``n_epochs`` (i32 scalar per vmapped client) is the client's EFFECTIVE
+    epoch count (partial-work fault injection, core/faults.py): epochs past
+    it still compute their gradient (the vmapped step stays SPMD-uniform,
+    same as the availability simulation) but stop updating the parameters.
+    With ``n_epochs == local_epochs`` the masking is the identity."""
+
+    def client_update(params, data, rng, n_epochs):
         # data: {x, y, eval_x, eval_y, n} for ONE client
-        def epoch(p, key):
+        def epoch(p, inp):
+            _, i = inp
+
             def loss_fn(q):
                 l, _ = model.loss(q, {"x": data["x"], "y": data["y"]})
                 if fed_cfg.prox_mu:
@@ -91,10 +103,14 @@ def make_client_update(model, fed_cfg):
 
             g = jax.grad(loss_fn)(p)
             return jax.tree_util.tree_map(
-                lambda w, gw: w - fed_cfg.local_lr * gw, p, g), None
+                lambda w, gw: jnp.where(i < n_epochs,
+                                        w - fed_cfg.local_lr * gw, w),
+                p, g), None
 
-        local, _ = jax.lax.scan(epoch, params,
-                                jax.random.split(rng, fed_cfg.local_epochs))
+        local, _ = jax.lax.scan(
+            epoch, params,
+            (jax.random.split(rng, fed_cfg.local_epochs),
+             jnp.arange(fed_cfg.local_epochs)))
 
         gl, gmet = model.loss(params, {"x": data["eval_x"], "y": data["eval_y"]})
         ll, lmet = model.loss(local, {"x": data["eval_x"], "y": data["eval_y"]})
@@ -104,16 +120,24 @@ def make_client_update(model, fed_cfg):
 
 
 def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
-               malicious=None):
+               malicious=None, faults=None):
     """Builds the jittable one-round function.
 
     data_attack(batch_k_stacked, malicious, rng) -> corrupted batch
     update_attack(updates, malicious, rng) -> corrupted updates
+    faults: optional ``faults.FaultConfig`` — system-heterogeneity
+    injection (stragglers / mid-round dropout / partial local work).
+    Fault draws come from keys folded off the round's own rng streams,
+    so they live in the scan carry and scan==python parity holds.
     """
     client_update = make_client_update(model, fed_cfg)
     K = fed_cfg.n_clients
     mal = malicious if malicious is not None else jnp.zeros((K,), jnp.float32)
     codec = comm_codecs.make_codec(fed_cfg)
+    if faults is not None and not faults.active:
+        faults_cfg = None                       # inactive == no injection
+    else:
+        faults_cfg = faults
 
     def round_fn(state: FedState, data):
         """data: client-stacked {x:(K,B,...), y:(K,B), eval_x, eval_y, n:(K,)}
@@ -122,14 +146,31 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         avail = data.get("avail", jnp.ones((K,), jnp.float32))
         t = state.round
 
+        # ---- fault injection: stragglers miss the round deadline -------
+        # a late client simply never arrives, so the straggle composes
+        # with the whole availability path: selection, fitness masks, and
+        # the stale_weight catch-up (a slot-team member that straggles
+        # re-enters at stale weight, like any other unavailability)
+        if faults_cfg is not None and faults_cfg.stragglers_active:
+            avail = avail * faults_mod.sample_arrivals(
+                faults_cfg, jax.random.fold_in(r_data, 11), K)
+
         if data_attack is not None:
             data = dict(data)
             data.update(data_attack(data, mal, r_data))
 
         # ---- local training (vmapped clients) --------------------------
+        # partial-work fault: heterogeneous effective local epochs
+        if faults_cfg is not None and faults_cfg.partial_active:
+            eff_epochs = faults_mod.sample_epochs(
+                faults_cfg, jax.random.fold_in(r_cli, 13), K,
+                fed_cfg.local_epochs)
+        else:
+            eff_epochs = jnp.full((K,), fed_cfg.local_epochs, jnp.int32)
         keys = jax.random.split(r_cli, K)
         locals_, (gl, ga, ll, la) = jax.vmap(
-            client_update, in_axes=(None, 0, 0))(state.params, data, keys)
+            client_update, in_axes=(None, 0, 0, 0))(state.params, data,
+                                                    keys, eff_epochs)
         updates = jax.tree_util.tree_map(
             lambda w_k, w: w_k - w[None], locals_, state.params)
 
@@ -163,6 +204,12 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             jnp.array(fed_cfg.dynamic_alpha),
             fitness.dynamic_alpha(q, th, avail), jnp.float32(fed_cfg.alpha))
         scores = fitness.score(q, th, alpha)
+        if fed_cfg.trust_in_fitness:
+            # dynamic client scoring: the cosine-gate trust EWMA scales
+            # the fitness score, so repeatedly-gated clients stop being
+            # elected.  gate_trust is exactly 1.0 until someone is gated,
+            # keeping the fold behavior-preserving on clean runs.
+            scores = scores * state.gate_trust
 
         # ---- selection (only when h(t): FFA/NAT rounds) ------------------
         if fed_cfg.algorithm == "fedfits":
@@ -184,25 +231,38 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         else:
             raise ValueError(fed_cfg.algorithm)
 
+        # ---- fault injection: mid-round dropout ------------------------
+        # a SELECTED client computes its update (so it is still billed,
+        # compute and uplink both — the loss is on the server side of the
+        # wire) but the update never reaches the aggregate.  Dropped
+        # clients are NOT stale catch-up contributors: stale covers
+        # clients that never arrived, not updates lost in flight.
+        if faults_cfg is not None and faults_cfg.dropout_active:
+            lost = faults_mod.sample_dropout(
+                faults_cfg, jax.random.fold_in(r_sel, 12), team)
+        else:
+            lost = jnp.zeros((K,), jnp.float32)
+        delivered = team * (1.0 - lost)
+
         # ---- aggregation -------------------------------------------------
         # async catch-up (Table II gap 2): slot-team members that went
         # unavailable this round still contribute at stale_weight
         stale = fed_cfg.stale_weight * state.team * (1.0 - avail)
-        part = jnp.clip(team + stale, 0.0, 1.0)
+        part = jnp.clip(delivered + stale, 0.0, 1.0)
         if fed_cfg.paper_exact_agg:
             # Algorithm 1's size-proportional FedAvg step.  The paper
             # writes n_k/|S_t|, but data["n"] carries REAL partition
             # sizes, so dividing raw counts by the team size would scale
             # the update by ~mean(n_k) (hundreds x); the convex
             # combination the algorithm means is n_k / sum_{j in S_t} n_j
-            w = data["n"].astype(jnp.float32) * team
+            w = data["n"].astype(jnp.float32) * delivered
             w = w / jnp.maximum(w.sum(), 1e-12)
             agg = jax.tree_util.tree_map(
                 lambda l: jnp.tensordot(w.astype(l.dtype), l, axes=(0, 0)),
                 updates)
         else:
             weights = data["n"].astype(jnp.float32) * state.trust \
-                * (team + stale)
+                * (delivered + stale)
             part_mask = (part > 0).astype(jnp.float32)
             from repro.comm.kernels import comm_codecs as dq
             if enc is not None and dq.should_fuse(codec, fed_cfg, updates):
@@ -225,6 +285,20 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         new_trust = aggregation.update_trust(state.trust, scores, team,
                                              fed_cfg.trust_decay)
 
+        # gate-trust EWMA (dynamic client scoring): participants whose
+        # update points AWAY from the round's robust aggregate (cosine
+        # below the gate threshold — the same rejection the Eq.-11
+        # cosine gate applies in-kernel) see their trust decay toward 0;
+        # clean participants decay toward 1, non-participants hold.
+        cos = aggregation.cosine_to_ref(updates, agg)
+        gated = ((cos < fed_cfg.cosine_outlier_thresh)
+                 & (part > 0)).astype(jnp.float32)
+        new_gate_trust = jnp.where(
+            part > 0,
+            fed_cfg.trust_decay * state.gate_trust
+            + (1.0 - fed_cfg.trust_decay) * (1.0 - gated),
+            state.gate_trust)
+
         # cost accounting: FFA rounds bill every available client, slot
         # rounds the present team — PLUS, in both, the stale catch-up
         # clients: they went unavailable but still trained and submitted
@@ -244,13 +318,19 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             cost_client_rounds=state.cost_client_rounds + billed,
             cost_bytes_up=state.cost_bytes_up + billed * bytes_up_pc,
             cost_bytes_down=state.cost_bytes_down + billed * bytes_down_pc,
-            ef=new_ef)
+            ef=new_ef, gate_trust=new_gate_trust)
         metrics = {
             "theta": th, "score": scores, "team": team, "alpha": alpha,
             "theta_team": theta_team, "h_next": h_next,
             "global_loss_mean": (gl * avail).sum() / jnp.maximum(avail.sum(), 1),
             "local_loss_mean": (ll * avail).sum() / jnp.maximum(avail.sum(), 1),
             "team_size": team.sum(),
+            # robustness / fairness block (scenario engine, ROADMAP item 5)
+            "gate_trust": new_gate_trust,
+            "gated_frac": gated.sum() / jnp.maximum(part.sum(), 1.0),
+            "fault_lost": lost.sum(),
+            "fault_eff_epochs": eff_epochs.astype(jnp.float32).mean(),
+            **fairness.round_fairness(ga, avail, state.cum_selected + team),
         }
         return new_state, metrics
 
@@ -259,7 +339,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
 
 def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
         data_attack=None, update_attack=None, malicious=None,
-        driver="scan", chunk_rounds=8):
+        faults=None, driver="scan", chunk_rounds=8):
     """Drives n_rounds of FL. data_fn(round, rng) -> client-stacked batch.
     eval_fn(params) -> dict of server-side metrics (optional, per round).
     Returns (final_state, history list of dicts).
@@ -276,7 +356,8 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
     params = model.init(r_init)
     state = init_state(params, fed_cfg.n_clients, fed_cfg, r_run)
     round_fn = make_round(model, fed_cfg, data_attack=data_attack,
-                          update_attack=update_attack, malicious=malicious)
+                          update_attack=update_attack, malicious=malicious,
+                          faults=faults)
     K = fed_cfg.n_clients
 
     if driver == "python":

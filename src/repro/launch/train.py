@@ -53,6 +53,26 @@ def synthetic_lm_batches(cfg, tc, n_clients, seed):
     return jax.jit(sample)
 
 
+def run_scenario_cli(args):
+    """--scenario: one robustness-registry cell through the SimEngine."""
+    from repro.scenarios import run_scenario
+
+    rounds = min(args.steps, 50)        # SimEngine rounds, not LM steps
+    summary, hist = run_scenario(
+        args.scenario, n_clients=args.clients, n_rounds=rounds,
+        driver=args.driver, chunk_rounds=args.chunk_rounds)
+    for h in hist:
+        print(json.dumps({
+            "round": int(h["round"]),
+            "test_acc": round(float(h["test_acc"]), 4),
+            "trigger_acc": round(float(h["trigger_acc"]), 4),
+            "fair_worst_decile": round(float(h["fair_worst_decile"]), 4),
+            "fair_part_gini": round(float(h["fair_part_gini"]), 4),
+            "gated_frac": round(float(h["gated_frac"]), 4),
+        }))
+    print(json.dumps(summary))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-lm")
@@ -83,7 +103,21 @@ def main():
                          "sharding-aware batch prefetch); python: the "
                          "per-round jit loop (parity oracle)")
     ap.add_argument("--chunk-rounds", type=int, default=8)
+    ap.add_argument("--scenario", default=None,
+                    help="run a named robustness scenario (attack x "
+                         "heterogeneity x compression x aggregator cell "
+                         "from repro.scenarios.registry — e.g. "
+                         "alie_fedavg, gate_aware_trimmed, "
+                         "gate_aware_int8_dropout) through the SimEngine "
+                         "instead of the pod LM trainer; --steps sets the "
+                         "round count and --clients the cohort size. "
+                         "Prints per-round accuracy/trigger-accuracy/"
+                         "fairness rows and the robustness summary")
     args = ap.parse_args()
+
+    if args.scenario:
+        run_scenario_cli(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

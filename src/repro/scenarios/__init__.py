@@ -1,0 +1,10 @@
+"""Scenario engine (ROADMAP item 5): named attack x heterogeneity x
+compression x aggregator grid cells + the runner that turns one cell
+into a robustness/fairness row.
+
+  registry.get(name) / registry.all_scenarios()   the grid
+  engine.run_scenario(name_or_scenario, ...)      one cell -> summary
+"""
+from repro.scenarios.engine import run_scenario, summarize  # noqa: F401
+from repro.scenarios.registry import (SCENARIOS, Scenario,  # noqa: F401
+                                      all_scenarios, get, smoke_grid)

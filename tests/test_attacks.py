@@ -83,3 +83,156 @@ def test_feature_noise_seeded_determinism():
     b = attacks.feature_noise(x, MAL, 0.5, jax.random.PRNGKey(5))
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(a[2:]), np.asarray(x[2:]))
+
+
+# ------------------------------------------------------------------
+# layout-aware backdoor trigger (regression: the old stamp hardcoded
+# NHWC and sliced the batch/feature axes of tabular inputs)
+# ------------------------------------------------------------------
+def test_stamp_trigger_image_layout():
+    x = jnp.zeros((K, 4, 6, 6, 2))
+    out = attacks.stamp_trigger(x, patch=3, value=1.0)
+    assert np.all(np.asarray(out[:, :, :3, :3, :]) == 1.0)
+    assert np.all(np.asarray(out[:, :, 3:, :, :]) == 0.0)
+    assert np.all(np.asarray(out[:, :, :, 3:, :]) == 0.0)
+
+
+def test_stamp_trigger_tabular_feature_prefix():
+    x = jnp.zeros((K, 5, 9))
+    out = attacks.stamp_trigger(x, patch=3, value=1.0)
+    assert np.all(np.asarray(out[..., :3]) == 1.0)
+    assert np.all(np.asarray(out[..., 3:]) == 0.0)
+
+
+def test_stamp_trigger_hw_axes_override():
+    """Channel-less (B, H, W) would hit the feature-prefix heuristic —
+    hw_axes pins the spatial axes explicitly."""
+    x = jnp.zeros((5, 8, 8))
+    out = attacks.stamp_trigger(x, patch=2, hw_axes=(-2, -1))
+    assert np.all(np.asarray(out[:, :2, :2]) == 1.0)
+    assert np.all(np.asarray(out[:, 2:, :]) == 0.0)
+
+
+def test_backdoor_trigger_image_layout():
+    x = jax.random.normal(KEY, (K, 4, 6, 6, 1))
+    y = jnp.ones((K, 4), jnp.int32) * 5
+    bx, by = attacks.backdoor_trigger(x, y, MAL, target=0, patch=2)
+    assert np.all(np.asarray(bx[:2, :, :2, :2, :]) == 1.0)
+    np.testing.assert_array_equal(np.asarray(bx[2:]), np.asarray(x[2:]))
+    assert np.all(np.asarray(by[:2]) == 0)
+    np.testing.assert_array_equal(np.asarray(by[2:]), np.asarray(y[2:]))
+
+
+def test_backdoor_trigger_tabular_layout_regression():
+    """(K, B, D) tabular batches: the trigger is a feature prefix — the
+    batch axis must NOT be sliced (the old NHWC stamp corrupted the first
+    `patch` EXAMPLES of every malicious client instead)."""
+    x = jax.random.normal(KEY, (K, 5, 9))
+    y = jnp.ones((K, 5), jnp.int32)
+    bx, by = attacks.backdoor_trigger(x, y, MAL, target=0, patch=3)
+    assert np.all(np.asarray(bx[:2, :, :3]) == 1.0)
+    # every malicious EXAMPLE carries the trigger; trailing features and
+    # honest clients are untouched
+    np.testing.assert_array_equal(np.asarray(bx[:2, :, 3:]),
+                                  np.asarray(x[:2, :, 3:]))
+    np.testing.assert_array_equal(np.asarray(bx[2:]), np.asarray(x[2:]))
+    assert np.all(np.asarray(by[:2]) == 0)
+
+
+# ------------------------------------------------------------------
+# adaptive (optimization-based) attacks
+# ------------------------------------------------------------------
+def _honest_mu_sd(upd, n_mal=2):
+    flat = np.concatenate([np.asarray(l).reshape(K, -1)
+                           for l in jax.tree_util.tree_leaves(upd)], axis=1)
+    h = flat[n_mal:]
+    return flat, h.mean(0), h.std(0)
+
+
+def test_alie_explicit_z_matches_honest_stats():
+    upd = _updates()
+    out = attacks.alie(upd, MAL, z=2.0)
+    flat, mu, sd = _honest_mu_sd(out)
+    np.testing.assert_allclose(flat[0], mu - 2.0 * sd, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(flat[0], flat[1])  # colluders identical
+
+
+def test_alie_default_z_prescription_finite():
+    out = attacks.alie(_updates(), MAL)
+    for l in jax.tree_util.tree_leaves(out):
+        assert np.all(np.isfinite(np.asarray(l)))
+
+
+def test_adaptive_attacks_deterministic_and_honest_untouched():
+    upd = _updates()
+    cfg_like = type("C", (), {"cosine_outlier_thresh": -0.5,
+                              "trim_frac": 0.25,
+                              "aggregator": "trimmed_mean"})()
+    for fn in [lambda u: attacks.alie(u, MAL),
+               lambda u: attacks.min_max(u, MAL),
+               lambda u: attacks.min_sum(u, MAL),
+               lambda u: attacks.gate_aware(u, MAL, cfg_like)]:
+        a, b = fn(upd), fn(upd)
+        for k in upd:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+            np.testing.assert_array_equal(np.asarray(a[k][2:]),
+                                          np.asarray(upd[k][2:]))
+
+
+def _pairwise_sq(flat):
+    d = ((flat[:, None] - flat[None]) ** 2).sum(-1)
+    return d
+
+
+def test_min_max_distance_stays_inside_honest_profile():
+    upd = _updates()
+    out = attacks.min_max(upd, MAL)
+    flat, _, _ = _honest_mu_sd(out)
+    d = _pairwise_sq(flat)
+    budget = d[2:, 2:].max()            # max honest<->honest distance
+    assert d[0, 2:].max() <= budget * (1 + 1e-4)
+
+
+def test_min_sum_distance_stays_inside_honest_profile():
+    upd = _updates()
+    out = attacks.min_sum(upd, MAL)
+    flat, _, _ = _honest_mu_sd(out)
+    d = _pairwise_sq(flat)
+    budget = d[2:, 2:].sum(1).max()     # worst honest row-sum
+    assert d[0, 2:].sum() <= budget * (1 + 1e-4)
+
+
+def test_gate_aware_sits_inside_trim_window():
+    from repro.configs.base import FedConfig
+    key = jax.random.PRNGKey(7)
+    k = 10
+    mal = jnp.zeros((k,)).at[jnp.arange(3)].set(1.0)
+    upd = {"w": jax.random.normal(key, (k, 64)) * 0.1 + 1.0}
+    cfg = FedConfig(n_clients=k, aggregator="trimmed_mean", trim_frac=0.2,
+                    cosine_outlier_thresh=-0.5)
+    out = np.asarray(attacks.gate_aware(upd, mal, cfg)["w"])
+    honest = out[3:]
+    t = int(np.floor(0.2 * 7))
+    s = np.sort(honest, axis=0)
+    lo, hi = s[t], s[7 - 1 - t]
+    assert np.all(out[0] >= lo - 1e-5) and np.all(out[0] <= hi + 1e-5)
+    # and it is adversarial: anti-correlated with the honest mean
+    mu = honest.mean(0)
+    assert float(out[0] @ mu) < float(mu @ mu)
+    # and it clears its own gate: cosine vs the honest median >= thresh
+    med = np.median(honest, axis=0)
+    cos = (out[0] @ med) / (np.linalg.norm(out[0]) * np.linalg.norm(med))
+    assert cos >= cfg.cosine_outlier_thresh - 1e-5
+
+
+def test_gate_aware_unbounded_against_plain_mean():
+    """vs a fedavg aggregator there is no trim window: the crafted update
+    is the boosted anti-mean direction, far outside the honest spread."""
+    from repro.configs.base import FedConfig
+    key = jax.random.PRNGKey(7)
+    k = 10
+    mal = jnp.zeros((k,)).at[jnp.arange(3)].set(1.0)
+    upd = {"w": jax.random.normal(key, (k, 64)) * 0.1 + 1.0}
+    cfg = FedConfig(n_clients=k, aggregator="fedavg")
+    out = np.asarray(attacks.gate_aware(upd, mal, cfg)["w"])
+    assert np.linalg.norm(out[0]) > 5.0 * np.linalg.norm(out[3:], axis=1).max()

@@ -1,0 +1,220 @@
+"""Fault-injection layer (core/faults.py) + its threading through the
+round loop: dropout billing semantics, partial local work, straggler
+availability, all-unavailable rounds, and scan-vs-python parity with
+faults + adaptive attack + gate-trust EWMA live in the carry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import attacks, faults as faults_mod, fedfits
+from repro.core.faults import FaultConfig
+from repro.data.pipeline import build_federation
+from repro.models.model import build
+
+K = 6
+
+
+# ------------------------------------------------------------------
+# samplers
+# ------------------------------------------------------------------
+def test_fault_config_active_flags():
+    assert not FaultConfig().active
+    assert FaultConfig(dropout_prob=0.1).dropout_active
+    assert FaultConfig(straggler_frac=0.2).stragglers_active
+    assert FaultConfig(base_delay=0.5).stragglers_active
+    assert FaultConfig(partial_min_frac=0.5).partial_active
+
+
+def test_sample_arrivals_chronic_stragglers_are_the_tail():
+    fl = FaultConfig(straggler_frac=0.5, straggler_delay=1e6, deadline=1.0)
+    a = faults_mod.sample_arrivals(fl, jax.random.PRNGKey(0), 8)
+    # fast clients (base_delay=0) always arrive; the slow tail
+    # essentially never beats a deadline 1e6x below its mean delay
+    np.testing.assert_array_equal(np.asarray(a[:4]), 1.0)
+    assert np.asarray(a[4:]).sum() == 0.0
+
+
+def test_sample_dropout_respects_team_mask():
+    fl = FaultConfig(dropout_prob=1.0)
+    team = jnp.array([1.0, 0.0, 1.0, 0.0])
+    lost = faults_mod.sample_dropout(fl, jax.random.PRNGKey(0), team)
+    np.testing.assert_array_equal(np.asarray(lost), [1.0, 0.0, 1.0, 0.0])
+
+
+def test_sample_epochs_in_range():
+    fl = FaultConfig(partial_min_frac=0.25)
+    e = np.asarray(faults_mod.sample_epochs(fl, jax.random.PRNGKey(0),
+                                            64, 4))
+    assert e.min() >= 1 and e.max() <= 4 and len(set(e.tolist())) > 1
+
+
+# ------------------------------------------------------------------
+# round-loop integration
+# ------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    model = build(ARCHS["paper-mlp"])
+    fed, _ = build_federation(0, kind="tabular", n=600, n_clients=K,
+                              batch_size=16, n_classes=10)
+    return model, fed
+
+
+def _round_once(model, fed, cfg, faults=None, batch_extra=None, seed=0):
+    round_fn = jax.jit(fedfits.make_round(model, cfg, faults=faults))
+    params = model.init(jax.random.PRNGKey(7))
+    state = fedfits.init_state(params, K, cfg, jax.random.PRNGKey(8))
+    batch = dict(fed.data_fn(1, jax.random.PRNGKey(9)))
+    if batch_extra:
+        batch.update(batch_extra)
+    return state, round_fn(state, batch)
+
+
+def test_inactive_fault_config_bitwise_equals_none(setup):
+    model, fed = setup
+    cfg = FedConfig(n_clients=K, local_epochs=2)
+    _, (s_none, m_none) = _round_once(model, fed, cfg, faults=None)
+    _, (s_off, m_off) = _round_once(model, fed, cfg, faults=FaultConfig())
+    for a, b in zip(jax.tree_util.tree_leaves(s_none.params),
+                    jax.tree_util.tree_leaves(s_off.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in m_none:
+        np.testing.assert_array_equal(np.asarray(m_none[k]),
+                                      np.asarray(m_off[k]))
+
+
+def test_total_dropout_loses_update_but_bills_compute(setup):
+    """dropout_prob=1: every selected client computes (billed) but the
+    update never lands -> global params unchanged, billing unchanged."""
+    model, fed = setup
+    cfg = FedConfig(n_clients=K)
+    state, (s_drop, m) = _round_once(model, fed, cfg,
+                                     faults=FaultConfig(dropout_prob=1.0))
+    for a, b in zip(jax.tree_util.tree_leaves(s_drop.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(s_drop.cost_client_rounds) == K      # FFA round bills all
+    assert float(s_drop.cost_bytes_up) > 0
+    assert float(m["fault_lost"]) == float(m["team_size"])
+
+
+def test_dropout_does_not_become_stale_catchup(setup):
+    """Dropped (selected, computed, lost) is distinct from stale (never
+    arrived): with stale_weight on and full dropout the aggregate is
+    still zero — dropped clients must not re-enter via the stale path."""
+    model, fed = setup
+    cfg = FedConfig(n_clients=K, stale_weight=0.5)
+    state, (s_drop, _) = _round_once(model, fed, cfg,
+                                     faults=FaultConfig(dropout_prob=1.0))
+    for a, b in zip(jax.tree_util.tree_leaves(s_drop.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_work_changes_update_but_preserves_epoch_count(setup):
+    """partial_min_frac < 1 must change the aggregate (fewer effective
+    epochs) while the billed client-rounds stay the same — partial work
+    is a quality fault, not a billing fault."""
+    model, fed = setup
+    cfg = FedConfig(n_clients=K, local_epochs=4)
+    _, (s_full, m_full) = _round_once(model, fed, cfg, faults=None)
+    _, (s_part, m_part) = _round_once(
+        model, fed, cfg, faults=FaultConfig(partial_min_frac=0.25))
+    assert float(m_part["fault_eff_epochs"]) < 4.0
+    assert float(m_full["fault_eff_epochs"]) == 4.0
+    assert float(s_part.cost_client_rounds) \
+        == float(s_full.cost_client_rounds)
+    diffs = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree_util.tree_leaves(s_full.params),
+                             jax.tree_util.tree_leaves(s_part.params))]
+    assert any(diffs)
+
+
+def test_stragglers_shrink_the_billed_cohort(setup):
+    """Chronic stragglers never beat the deadline -> they are excluded
+    from selection AND from billing (they never arrived)."""
+    model, fed = setup
+    cfg = FedConfig(n_clients=K)
+    fl = FaultConfig(straggler_frac=0.5, straggler_delay=1e6)
+    _, (s_fault, m) = _round_once(model, fed, cfg, faults=fl)
+    assert float(m["team_size"]) <= K // 2
+    assert float(s_fault.cost_client_rounds) <= K // 2
+    np.testing.assert_array_equal(np.asarray(m["team"][K // 2:]), 0.0)
+
+
+@pytest.mark.parametrize("algo", ["fedfits", "fedavg", "fedrand", "fedpow"])
+def test_no_algorithm_selects_unavailable(algo):
+    """Deterministic twin of the hypothesis property (test_property.py
+    skips wholesale where hypothesis isn't installed): under any
+    availability pattern, team <= avail for every selection algorithm."""
+    from repro.core import selection
+    for seed in range(20):
+        key = jax.random.PRNGKey(seed)
+        k = 4 + seed % 9
+        avail = (jax.random.uniform(key, (k,)) < 0.5).astype(jnp.float32)
+        scores = jax.random.uniform(jax.random.fold_in(key, 1), (k,))
+        if algo == "fedfits":
+            team = selection.fedfits_select(
+                scores, 0.2, avail, jax.random.fold_in(key, 2),
+                explore_eps=0.3, floor_prob=0.3)
+        elif algo == "fedavg":
+            team = selection.fedavg_select(avail)
+        elif algo == "fedrand":
+            team = selection.fedrand_select(avail, 0.5,
+                                            jax.random.fold_in(key, 2))
+        else:
+            team = selection.fedpow_select(scores, avail, 0.8, 3,
+                                           jax.random.fold_in(key, 2))
+        bad = np.asarray(team) * (1.0 - np.asarray(avail))
+        np.testing.assert_array_equal(bad, 0.0,
+                                      err_msg=f"{algo} seed {seed}")
+
+
+@pytest.mark.parametrize("algo", ["fedfits", "fedavg", "fedrand", "fedpow"])
+def test_all_unavailable_round_zero_update_zero_billing(setup, algo):
+    model, fed = setup
+    cfg = FedConfig(n_clients=K, algorithm=algo)
+    state, (s_out, m) = _round_once(
+        model, fed, cfg,
+        batch_extra={"avail": jnp.zeros((K,), jnp.float32)})
+    for a, b in zip(jax.tree_util.tree_leaves(s_out.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(s_out.cost_client_rounds) == 0.0
+    assert float(s_out.cost_bytes_up) == 0.0
+    assert float(m["team_size"]) == 0.0
+
+
+def test_scan_python_parity_with_faults_attack_and_trust(setup):
+    """The PR invariant: fault draws + gate-trust EWMA live in the scan
+    carry, so the chunked scan driver stays bit-for-bit equal to the
+    python loop under simultaneous fault injection, an adaptive attack,
+    and availability sampling."""
+    model, fed = setup
+    malicious = jnp.zeros((K,)).at[jnp.arange(2)].set(1.0)
+
+    def update_attack(upd, mal, rng):
+        return attacks.alie(upd, mal, z=3.0)
+
+    cfg = FedConfig(n_clients=K, local_epochs=2, avail_prob=0.8,
+                    stale_weight=0.3, aggregator="trimmed_mean",
+                    trust_in_fitness=True)
+    fl = FaultConfig(dropout_prob=0.3, straggler_frac=0.3,
+                     straggler_delay=2.0, partial_min_frac=0.5)
+    kw = dict(update_attack=update_attack, malicious=malicious, faults=fl)
+    s_py, h_py = fedfits.run(model, cfg, fed.data_fn, 5,
+                             jax.random.PRNGKey(4), driver="python", **kw)
+    s_sc, h_sc = fedfits.run(model, cfg, fed.data_fn, 5,
+                             jax.random.PRNGKey(4), driver="scan",
+                             chunk_rounds=2, **kw)
+    assert len(h_py) == len(h_sc)
+    for r_py, r_sc in zip(h_py, h_sc):
+        assert set(r_py) == set(r_sc)
+        for k in r_py:
+            np.testing.assert_array_equal(
+                np.asarray(r_py[k]), np.asarray(r_sc[k]),
+                err_msg=f"round {r_py['round']} key {k}")
+    for a, b in zip(jax.tree_util.tree_leaves(s_py), jax.tree_util.tree_leaves(s_sc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -99,3 +99,39 @@ def test_dynamic_alpha_bounds(k, seed):
     th = jax.random.uniform(jax.random.fold_in(key, 1), (k,))
     a = float(fitness.dynamic_alpha(q, th))
     assert 0.0 <= a <= 1.0
+
+
+def _select(algo, avail, key):
+    scores = jax.random.uniform(jax.random.fold_in(key, 1), avail.shape)
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), avail.shape)
+    if algo == "fedfits":
+        return selection.fedfits_select(scores, 0.2, avail,
+                                        jax.random.fold_in(key, 3),
+                                        explore_eps=0.3, floor_prob=0.3)
+    if algo == "fedavg":
+        return selection.fedavg_select(avail)
+    if algo == "fedrand":
+        return selection.fedrand_select(avail, 0.5,
+                                        jax.random.fold_in(key, 3))
+    return selection.fedpow_select(losses, avail, 0.8, 3,
+                                   jax.random.fold_in(key, 3))
+
+
+@pytest.mark.parametrize("algo", ["fedfits", "fedavg", "fedrand", "fedpow"])
+@given(k=st.integers(2, 16), seed=st.integers(0, 200),
+       p=st.floats(0.0, 1.0, allow_nan=False))
+def test_no_algorithm_selects_unavailable_clients(algo, k, seed, p):
+    """Straggler faults shrink `avail`; no selection algorithm may ever
+    route an unavailable client into the team mask."""
+    key = jax.random.PRNGKey(seed)
+    avail = (jax.random.uniform(key, (k,)) < p).astype(jnp.float32)
+    team = np.asarray(_select(algo, avail, key))
+    assert np.all(team * (1.0 - np.asarray(avail)) == 0.0)
+
+
+@pytest.mark.parametrize("algo", ["fedfits", "fedavg", "fedrand", "fedpow"])
+@given(k=st.integers(1, 16), seed=st.integers(0, 200))
+def test_all_unavailable_round_selects_nobody(algo, k, seed):
+    avail = jnp.zeros((k,), jnp.float32)
+    team = np.asarray(_select(algo, avail, jax.random.PRNGKey(seed)))
+    assert float(team.sum()) == 0.0
