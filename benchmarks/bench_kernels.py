@@ -14,6 +14,9 @@ forces 4 host devices), recording the parity gap vs the XLA oracle.
 per-codec encode+decode wall and measured bytes-on-wire per round vs the
 dense uplink, and the int8 fused dequant-into-aggregation kernels vs the
 dense fused engine (agg-byte reduction ~4x at qblk=128).
+``population_select/*`` records the O(M) Gumbel-top-d cohort-selection
+engines (kernels/population_select.py) against the dense argsort
+baseline at M up to 1e6 registered clients.
 Results are also dumped to BENCH_kernels.json (the perf trajectory
 artifact CI uploads every run).
 """
@@ -30,6 +33,7 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.configs.base import HBM_BW, PEAK_FLOPS_BF16, FedConfig
 from repro.core import aggregation
+from repro.kernels import population_select
 from repro.kernels.flash_attention_ops import flash_attention
 from repro.kernels.robust_agg_ops import robust_aggregate_tree
 from repro.kernels.robust_pipeline import (fused_aggregate_tree,
@@ -280,6 +284,32 @@ def run(budget="small"):
                 comm_codecs.wire_bytes_per_client(int8_enc) * C,
         })
 
+    # ---- O(M) population selection (kernels/population_select.py) -----
+    # Gumbel-top-d cohort sampling for the buffered-async engine: the
+    # segmented two-stage reduction and the blocked Pallas kernel
+    # (interpret mode off-TPU) vs the dense O(M log M) argsort baseline,
+    # at registry sizes up to the million-client regime (d = 64 cohort)
+    d_sel = 64
+    for m_pop in (10_000, 100_000, 1_000_000):
+        g = jax.random.normal(jax.random.fold_in(key, m_pop), (m_pop,))
+        walls = {}
+        for method in ("argsort", "segmented", "pallas"):
+            fn = jax.jit(functools.partial(population_select.topd, d=d_sel,
+                                           method=method, blk=4096))
+            walls[method] = _time(lambda: fn(g), reps=3)
+        for method in ("segmented", "pallas"):
+            out.append({
+                "name": f"population_select/{method}/M{m_pop}/d{d_sel}",
+                "wall_s": walls[method],
+                "wall_s_argsort": walls["argsort"],
+                "speedup_vs_argsort": walls["argsort"] / walls[method],
+                "population": m_pop, "cohort": d_sel, "blk": 4096,
+                # stage 1 streams M keys once; stage 2 merges (M/blk)*d
+                # candidates — vs the sort's full key + permutation traffic
+                "bytes_stream": 4.0 * m_pop,
+                "candidates_merged": (m_pop // 4096 + 1) * d_sel,
+            })
+
     out.append(bench_pod_scan_driver())
     return out
 
@@ -373,6 +403,9 @@ def main(budget="small"):
         elif "wire_reduction" in r:
             extra = (f"wire_x{r['wire_reduction']:.1f} "
                      f"bytes/round={r['bytes_on_wire_per_round']:.0f}")
+        elif "speedup_vs_argsort" in r:
+            extra = (f"speedup_vs_argsort={r['speedup_vs_argsort']:.1f}x "
+                     f"M={r['population']} d={r['cohort']}")
         elif "speedup_vs_python" in r:
             extra = (f"speedup_vs_python={r['speedup_vs_python']:.2f}x "
                      f"syncs={r['host_syncs_scan']}"

@@ -1,0 +1,90 @@
+"""Buffered-async healthcare walkthrough (ROADMAP item 1): a regional
+network registers 60 clinics but only 12 report per round, and an
+increasing share of them are chronic stragglers (rural links, shared
+imaging workstations).  The synchronous engine must either wait for the
+slowest clinic or drop its work; the buffered-async engine samples a
+cohort by fitness x trust (O(M) Gumbel-top-d over the ClientStore),
+races each delivery against a round deadline, parks the late ones in a
+staleness-weighted retry buffer, and routes around clinics that keep
+timing out — so accuracy degrades GRACEFULLY as the straggler rate
+climbs.
+
+Sweeps the straggler rate over {0%, 15%, 30%, 45%} and prints best/final
+accuracy, on-time fraction, buffered deliveries and abandoned work for
+the async engine, against the fault-free synchronous baseline.
+
+  PYTHONPATH=src python examples/async_healthcare.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS
+from repro.core import async_engine, fedfits
+from repro.core.faults import FaultConfig
+from repro.data.pipeline import build_federation
+
+M, C, ROUNDS = 60, 12, 12       # registered clinics, cohort, rounds
+
+from repro.models.model import build
+
+model = build(ARCHS["paper-mlp"])
+federation, server_test = build_federation(
+    seed=0, kind="tabular", n=3000, n_clients=M, batch_size=32,
+    n_classes=10, sep=1.0, dirichlet_alpha=1.0)
+
+
+@jax.jit
+def evaluate(params):
+    _, m = model.loss(params, server_test)
+    return {"test_acc": m["acc"]}
+
+
+cfg = FedConfig(n_clients=C, population=M, algorithm="fedavg",
+                aggregator="trimmed_mean", local_epochs=2, local_lr=0.2,
+                async_deadline=1.0, async_max_retries=2,
+                async_backoff=1.5, staleness_decay=0.5)
+
+# fault-free synchronous reference: a C-clinic federation where everyone
+# always answers (the best case the async engine is measured against)
+sync_fed, sync_test = build_federation(
+    seed=0, kind="tabular", n=3000, n_clients=C, batch_size=32,
+    n_classes=10, sep=1.0, dirichlet_alpha=1.0)
+sync_cfg = FedConfig(n_clients=C, algorithm="fedavg",
+                     aggregator="trimmed_mean", local_epochs=2,
+                     local_lr=0.2)
+
+
+@jax.jit
+def evaluate_sync(params):
+    _, m = model.loss(params, sync_test)
+    return {"test_acc": m["acc"]}
+
+
+_, h_sync = fedfits.run(model, sync_cfg, sync_fed.data_fn, ROUNDS,
+                        jax.random.PRNGKey(1), eval_fn=evaluate_sync)
+sync_best = max(float(h["test_acc"]) for h in h_sync)
+print(f"{M} registered clinics, cohort {C}/round, {ROUNDS} rounds")
+print(f"synchronous fault-free baseline: best_acc={sync_best:.3f}\n")
+print(f"{'stragglers':>10s} {'best_acc':>8s} {'final':>6s} "
+      f"{'on_time':>7s} {'buffered':>8s} {'abandoned':>9s}")
+
+for frac in (0.0, 0.15, 0.30, 0.45):
+    fl = FaultConfig(straggler_frac=frac, straggler_delay=3.0,
+                     base_delay=0.3) if frac else FaultConfig()
+    state, hist = async_engine.run_async(
+        model, cfg, federation.data, ROUNDS, jax.random.PRNGKey(1),
+        eval_fn=evaluate, batch_size=32, faults=fl)
+    accs = [float(h["test_acc"]) for h in hist]
+    on_time = sum(float(h["on_time_frac"]) for h in hist) / len(hist)
+    buffered = sum(float(h["buffered"]) for h in hist)
+    abandoned = sum(float(h["abandoned"]) for h in hist)
+    print(f"{frac:10.0%} {max(accs):8.3f} {accs[-1]:6.3f} "
+          f"{on_time:7.0%} {buffered:8.0f} {abandoned:9.0f}")
+
+print(f"\nevery cohort client is billed once per computed round "
+      f"({float(state.cost_client_rounds):.0f} client-rounds at 45% "
+      f"stragglers — identical to the fault-free bill): timed-out work "
+      f"is billed-but-lost, and chronic stragglers' trust decays so the "
+      f"Gumbel-top-d scheduler routes around them (graceful degradation "
+      f"instead of a straggler-paced round clock)")

@@ -194,6 +194,21 @@ class FedConfig:
                                       # wire codes (dequant in VMEM inside
                                       # the fused Eq.-11 kernels; False ->
                                       # decode-then-aggregate oracle)
+    # aggregation-boundary guard: NaN/Inf or absurd-norm deliveries are
+    # rejected (zeroed + masked out) with a gate-trust penalty instead of
+    # entering the global model
+    update_guard: bool = True
+    guard_norm_mult: float = 1e4      # reject ||u|| > mult * median ||u||
+    # population-scale / buffered-async round engine (core/async_engine)
+    population: int = 0               # M registered clients (0 -> n_clients;
+                                      # the cohort C = n_clients is SAMPLED
+                                      # from the M-row ClientStore per round)
+    async_deadline: float = 1.0       # per-round deadline the delivery races
+    async_max_retries: int = 2        # late updates retry <= this many rounds
+    async_backoff: float = 1.5        # retry window = deadline * backoff^age
+    staleness_decay: float = 0.5      # buffered weight *= decay^age
+    select_method: str = "segmented"  # population top-d engine:
+                                      # argsort|segmented|pallas
     # selection algorithm: fedfits|fedavg|fedrand|fedpow
     algorithm: str = "fedfits"
     prox_mu: float = 0.0              # FedProx proximal term (baseline from

@@ -38,6 +38,66 @@ def normalize_weights(weights, mask):
     return w / jnp.maximum(w.sum(), 1e-12)
 
 
+def sanitize_updates(updates, mask, *, norm_mult=1e4):
+    """Aggregation-boundary hardening: reject non-finite (NaN/Inf) or
+    absurd-norm client deliveries BEFORE any aggregator sees them.
+
+    A crashed client ships NaNs, a hostile one ships 1e30-scale rows —
+    either one entering even a single coordinate of the global model is
+    unrecoverable (NaN propagates through every later round), and the
+    robust aggregators do NOT cover it: a nan row poisons the sort-based
+    order statistics and the cosine gate's own reference.  Runs on the
+    raw delivered rows ahead of BOTH the fused Pallas and XLA reference
+    paths, so both are covered by construction.
+
+    Rejection rule per masked-in client row:
+      * any non-finite coordinate anywhere in its update tree, or
+      * tree-wide L2 norm > ``norm_mult`` x the median norm of the
+        finite masked-in rows (``norm_mult`` <= 0 disables the norm
+        rule; the finiteness rule always applies).  The threshold is
+        RELATIVE — absolute scales are model/lr-dependent — and the
+        default 1e4 headroom keeps every legitimate attack scenario
+        (10x sign-flip, ALIE) untouched: this guard is for absurd rows,
+        the Eq.-11 pipeline handles the adversarial-but-plausible ones.
+
+    Returns ``(clean_updates, clean_mask, rejected)``: rejected rows are
+    zeroed and masked out (an all-rejected cohort therefore hits the
+    aggregators' empty-mask path and yields a ZERO update), and
+    ``rejected`` (K,) 0/1 lets the caller charge a trust penalty.  With
+    all-finite sane inputs the outputs are bit-identical passthroughs.
+    """
+    k = mask.shape[0]
+    finite = jnp.ones((k,), bool)
+    sq = jnp.zeros((k,), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(updates):
+        f = leaf.reshape(k, -1).astype(jnp.float32)
+        ok = jnp.isfinite(f)
+        finite = finite & ok.all(axis=1)
+        sq = sq + jnp.sum(jnp.where(ok, f, 0.0) ** 2, axis=1)
+    norm = jnp.sqrt(sq)
+    good = finite & (mask > 0)
+    if norm_mult and norm_mult > 0:
+        # masked median of the finite rows' norms (the reference scale)
+        n_good = good.sum()
+        s = jnp.sort(jnp.where(good, norm, jnp.inf))
+        lo = jnp.floor(jnp.maximum(n_good - 1, 0) / 2).astype(jnp.int32)
+        hi = jnp.ceil(jnp.maximum(n_good - 1, 0) / 2).astype(jnp.int32)
+        med = 0.5 * (s[lo] + s[hi])
+        med = jnp.where(n_good > 0, med, 0.0)
+        sane = norm <= norm_mult * jnp.maximum(med, 1e-12)
+        ok_row = finite & sane
+    else:
+        ok_row = finite
+    rejected = ((mask > 0) & ~ok_row).astype(jnp.float32)
+    okf = ok_row.astype(jnp.float32)
+    clean = jax.tree_util.tree_map(
+        lambda l: jnp.where(
+            okf.reshape((k,) + (1,) * (l.ndim - 1)) > 0, l,
+            jnp.zeros_like(l)),
+        updates)
+    return clean, mask * okf, rejected
+
+
 def weighted_mean(updates, weights, mask):
     w = normalize_weights(weights, mask)
 

@@ -247,6 +247,99 @@ def min_sum(updates, malicious, *, dev="std", n_iters=25, gamma_init=10.0):
                             n_iters=n_iters, gamma_init=gamma_init)
 
 
+class CrossRoundGateAware:
+    """Stateful cross-round adaptive attacker (PR-5 follow-up): instead
+    of modelling the gate analytically like ``gate_aware``, it PROBES it
+    — the carry holds a blend weight b and last round's gate outcome,
+    and each round it re-tunes b from whether its colluders were caught:
+
+      caught   (any malicious row gated/rejected last round):
+               b <- b + lr * (1 - b)   — retreat toward the reference
+      evaded:  b <- b * (1 - lr)       — press the attack harder
+
+    The crafted update is (1-b) * v + b * ref with v the trim-window
+    poison corner and ref the anticipated contaminated median (both from
+    the ``gate_aware`` machinery), so b=1 is indistinguishable from an
+    honest-looking median and b=0 is the full boosted poison.  The carry
+    rides the round scan (``FedState.attacker``), so scan==python
+    bit-parity holds with the attacker adapting across rounds — and the
+    async buffer delivers its STALE probes late, which is exactly the
+    evasion channel the ``async_late_poison`` scenario stresses.
+
+    Protocol (``stateful = True``; see core/fedfits.py):
+      init(K)                     -> carry (b0, zeros(K))
+      __call__(upd, mal, rng, c)  -> (crafted, adapted b)
+      observe(b, gated_mask)      -> next carry (b, gated_mask)
+    """
+
+    stateful = True
+
+    def __init__(self, cfg, *, scale=100.0, lr=0.5, blend0=0.5):
+        self.cfg = cfg
+        self.scale = float(scale)
+        self.lr = float(lr)
+        self.blend0 = float(blend0)
+
+    def init(self, n_clients):
+        return (jnp.float32(self.blend0),
+                jnp.zeros((n_clients,), jnp.float32))
+
+    def __call__(self, updates, malicious, rng, carry):
+        blend, prev_gated = carry
+        caught = (prev_gated * malicious).sum() > 0
+        blend = jnp.where(caught,
+                          blend + self.lr * (1.0 - blend),
+                          blend * (1.0 - self.lr))
+        flat, leaves, treedef = _flatten_clients(updates)
+        v, ref, lo, hi, trims = _gate_aware_targets(
+            flat, malicious, self.cfg, scale=self.scale)
+        crafted = (1.0 - blend) * v + blend * ref
+        if trims:
+            crafted = jnp.clip(crafted, lo, hi)
+        out = _unflatten_clients(
+            _replace_malicious(flat, malicious, crafted), leaves, treedef)
+        return out, blend
+
+    def observe(self, blend, gated_mask):
+        return (blend, gated_mask)
+
+    @staticmethod
+    def gather(carry, idx):
+        """Cohort view of a population-scale carry (the async engine
+        keeps prev_gated as an (M,) column and hands the attacker just
+        the sampled rows)."""
+        blend, prev_gated = carry
+        return (blend, prev_gated[idx])
+
+
+def _gate_aware_targets(flat, malicious, cfg, *, scale=100.0):
+    """The poison corner v, gate reference ref and trim window (lo, hi)
+    shared by ``gate_aware`` (analytic blend) and ``CrossRoundGateAware``
+    (probed blend)."""
+    _, _, h, nh = _honest_stats(flat, malicious)
+    mu = (flat * h[:, None]).sum(0) / nh
+    k = flat.shape[0]
+    trims = cfg.aggregator != "fedavg"
+    asc = jnp.sort(jnp.where(h[:, None] > 0, flat, jnp.inf), axis=0)
+    t = jnp.floor(cfg.trim_frac * nh).astype(jnp.int32)
+    take = lambda s, i: jnp.take_along_axis(
+        s, jnp.broadcast_to(i, (1, flat.shape[1])).astype(jnp.int32), 0)[0]
+    lo = take(asc, t)
+    desc = jnp.sort(jnp.where(h[:, None] > 0, flat, -jnp.inf), axis=0)
+    hi = take(desc, k - 1 - t)
+    nh_i = nh.astype(jnp.int32)
+    ref = 0.5 * (take(asc, (nh_i - 1) // 2) + take(asc, nh_i // 2))
+    if not trims:
+        m_cnt = k - nh_i
+        side = (mu > 0).astype(jnp.int32)
+        lo_r = jnp.clip((k - 1) // 2 - m_cnt * side, 0, nh_i - 1)
+        hi_r = jnp.clip(k // 2 - m_cnt * side, 0, nh_i - 1)
+        ref = 0.5 * (take(asc, lo_r) + take(asc, hi_r))
+        lo, hi = jnp.full_like(lo, -jnp.inf), jnp.full_like(hi, jnp.inf)
+    v = jnp.clip(-scale * mu, lo, hi)
+    return v, ref, lo, hi, trims
+
+
 def gate_aware(updates, malicious, cfg, *, margin=0.1, scale=100.0,
                n_iters=20):
     """Defense-aware attacker for the Eq.-11 pipeline: reads

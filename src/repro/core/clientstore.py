@@ -1,0 +1,171 @@
+"""Population-scale client-state store (ROADMAP item 1).
+
+Everything before this PR assumed the cohort IS the population: fitness,
+trust, gate-trust, staleness and EF residuals lived in dense (K,) arrays
+inside ``FedState`` sized by the per-round cohort.  A real cross-device
+deployment (FedSelect-ME's multi-edge regime) registers MILLIONS of
+clients of which a few dozen are sampled per round.  ``ClientStore``
+decouples the two sizes:
+
+  * one pytree of (M,) per-client columns — fitness, trust, gate_trust,
+    staleness, failures, cum_selected — plus optional (M, ...) EF
+    residual handles, sized by the REGISTERED population M;
+  * the per-round cohort is a (C,) int32 index vector into the store:
+    ``gather`` pulls the sampled rows into the round, ``scatter_*``
+    helpers write the round's outcomes back (EWMA updates, failure
+    decay, staleness bumps) — all O(C) scatters against O(M) state;
+  * cohort sampling is O(M) Gumbel-top-d over the store's selection
+    priority (``kernels/population_select.py``: blocked Pallas /
+    segmented-XLA reduction — no full M log M argsort), so selection at
+    M = 1e6 stays a streaming pass (``bench_kernels``'s
+    ``population_select/*`` entries record the wall vs the dense argsort
+    baseline);
+  * on a mesh the (M,) columns shard over the combined data x model axes
+    (``sharding.specs.client_store_specs``); gather/scatter become the
+    only cross-shard traffic of the selection path.
+
+The synchronous SimEngine (core/fedfits.py) now carries a ClientStore
+with M == K (population == cohort — the old behavior as a special
+case); the buffered-async engine (core/async_engine.py) runs M >> C.
+
+Chronic-failure routing: every abandoned delivery or guard rejection
+(NaN/Inf/absurd-norm update) bumps ``failures`` and decays ``trust``
+multiplicatively, so the Gumbel-top-d priority of a flaky or hostile
+client shrinks and the scheduler routes around it — the
+``graceful degradation`` contract of the async round engine.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class ClientStore(NamedTuple):
+    """Per-client persistent state, one row per REGISTERED client (M,)."""
+    fitness: jnp.ndarray       # (M,) last fitness score (selection prior)
+    trust: jnp.ndarray         # (M,) score-driven EWMA trust
+    gate_trust: jnp.ndarray    # (M,) cosine-gate / guard rejection EWMA
+    staleness: jnp.ndarray     # (M,) i32 rounds since last delivery
+    failures: jnp.ndarray      # (M,) abandoned/rejected delivery count
+    cum_selected: jnp.ndarray  # (M,) times sampled into a cohort
+    ef: Any = None             # (M, ...) EF residual handles (compress on)
+
+    @property
+    def population(self) -> int:
+        return self.fitness.shape[0]
+
+
+def init_store(population: int, *, params=None, fed_cfg=None,
+               fitness_prior: float = 0.5) -> ClientStore:
+    """Fresh store for ``population`` registered clients.  EF residual
+    handles are allocated only when the fed config compresses the uplink
+    with error feedback (they are (M, ...)-dense here — at true
+    million-client scale they would be slot handles into a cohort-sized
+    pool, which is why they live behind the store boundary)."""
+    m = int(population)
+    ef = None
+    if params is not None and fed_cfg is not None \
+            and getattr(fed_cfg, "compress", "none") != "none" \
+            and getattr(fed_cfg, "error_feedback", False):
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((m,) + p.shape, p.dtype), params)
+    return ClientStore(
+        fitness=jnp.full((m,), fitness_prior, jnp.float32),
+        trust=jnp.full((m,), 0.5, jnp.float32),
+        gate_trust=jnp.ones((m,), jnp.float32),
+        staleness=jnp.zeros((m,), jnp.int32),
+        failures=jnp.zeros((m,), jnp.float32),
+        cum_selected=jnp.zeros((m,), jnp.float32),
+        ef=ef,
+    )
+
+
+def gather(store: ClientStore, idx) -> ClientStore:
+    """Pull the cohort rows (C,) out of the (M,) store columns."""
+    return jax.tree_util.tree_map(lambda a: a[idx], store)
+
+
+def selection_priority(store: ClientStore) -> jnp.ndarray:
+    """(M,) sampling weight for the Gumbel-top-d cohort draw: fitness
+    prior x both trust tracks.  Chronically flaky clients (decayed trust)
+    and repeatedly-gated clients (low gate_trust) sink; the additive
+    floor keeps every registered client reachable (no starvation — the
+    A4 participation-floor analogue at population scale)."""
+    pri = (store.fitness + 0.05) * store.trust * store.gate_trust
+    return jnp.maximum(pri, _EPS)
+
+
+def select_cohort(store: ClientStore, d: int, rng, *, method="segmented",
+                  blk: int = 4096) -> jnp.ndarray:
+    """Sample a without-replacement cohort of ``d`` clients with
+    probability proportional to ``selection_priority`` via Gumbel-top-d
+    (Efraimidis-Spirakis), O(M): see selection.population_cohort and
+    kernels/population_select.py."""
+    from repro.core import selection
+    return selection.population_cohort(
+        selection_priority(store), d, rng, method=method, blk=blk)
+
+
+# ----------------------------------------------------------------------
+# round-outcome scatters (all O(C) against the (M,) columns)
+# ----------------------------------------------------------------------
+def record_selection(store: ClientStore, idx) -> ClientStore:
+    """cum_selected bump for the sampled cohort."""
+    return store._replace(
+        cum_selected=store.cum_selected.at[idx].add(1.0))
+
+
+def record_fitness(store: ClientStore, idx, scores, decay: float
+                   ) -> ClientStore:
+    """EWMA the cohort's freshly-computed fitness scores into the store
+    (computed at COMPUTE time — a late delivery does not re-evaluate)."""
+    old = store.fitness[idx]
+    new = decay * old + (1.0 - decay) * scores
+    return store._replace(fitness=store.fitness.at[idx].set(new))
+
+
+def record_deliveries(store: ClientStore, owners, delivered_mask
+                      ) -> ClientStore:
+    """Staleness: +1 for everyone, reset to 0 for clients whose update
+    entered this round's aggregation buffer (on time or via retry).
+    ``owners`` (R,) population indices with a 0/1 ``delivered_mask``;
+    masked-off rows scatter out of range (dropped)."""
+    m = store.population
+    tgt = jnp.where(delivered_mask > 0, owners, m)     # m = out of range
+    stale = (store.staleness + 1).at[tgt].set(0, mode="drop")
+    return store._replace(staleness=stale)
+
+
+def record_failures(store: ClientStore, owners, failed_mask, *,
+                    trust_penalty: float = 0.7) -> ClientStore:
+    """Chronic-failure decay: each failed delivery (deadline exhausted,
+    buffer overflow, or guard rejection) bumps ``failures`` and decays
+    ``trust`` multiplicatively — repeated failure routes the scheduler
+    around the client (its Gumbel-top-d priority shrinks).  Duplicate
+    owners in one round compound via the product."""
+    m = store.population
+    tgt = jnp.where(failed_mask > 0, owners, m)
+    fails = store.failures.at[tgt].add(1.0, mode="drop")
+    pen = jnp.ones((m,), jnp.float32).at[tgt].multiply(
+        trust_penalty, mode="drop")
+    return store._replace(failures=fails, trust=store.trust * pen)
+
+
+def record_gate_trust(store: ClientStore, owners, part_mask, gated_mask,
+                      decay: float) -> ClientStore:
+    """Cosine-gate EWMA at population scale: participating owners decay
+    toward (1 - gated); everyone else holds.  Mirrors the in-round EWMA
+    of the synchronous engine.  With duplicate owners (a client's fresh
+    and buffered update in one round) the last scatter wins — an
+    acceptable tie-break for an EWMA."""
+    m = store.population
+    tgt = jnp.where(part_mask > 0, owners, m)
+    old = store.gate_trust[jnp.clip(owners, 0, m - 1)]
+    new = decay * old + (1.0 - decay) * (1.0 - gated_mask)
+    gt = store.gate_trust.at[tgt].set(
+        jnp.where(part_mask > 0, new, 0.0), mode="drop")
+    return store._replace(gate_trust=gt)

@@ -73,18 +73,39 @@ class FaultConfig:
             or self.partial_active
 
 
-def sample_arrivals(fl: FaultConfig, rng, n_clients: int):
-    """(K,) 0/1 arrival mask: client k arrives iff its exponential delay
-    (mean = its per-client scale) beats the deadline."""
+def delay_scales(fl: FaultConfig, n_clients: int, *, rows: str = "tail"):
+    """(K,) per-client mean-delay scales: the chronic stragglers get
+    ``straggler_delay``, everyone else ``base_delay``.  ``rows`` places
+    the chronic set at the population ``"tail"`` (default — malicious
+    clients are conventionally the FIRST rows, so the populations stay
+    disjoint) or ``"head"`` (the late-poison scenarios, where the
+    colluders ARE the stragglers and their updates arrive at stale
+    weight through the async buffer)."""
     k = n_clients
     if fl.straggler_frac > 0:
         n_slow = min(max(math.ceil(fl.straggler_frac * k - 1e-9), 1), k)
     else:
         n_slow = 0
-    is_slow = (jnp.arange(k) >= (k - n_slow)).astype(jnp.float32)
-    scale = fl.base_delay + (fl.straggler_delay - fl.base_delay) * is_slow
-    u = jax.random.uniform(rng, (k,), minval=1e-7, maxval=1.0)
-    delay = scale * (-jnp.log(u))
+    if rows == "head":
+        is_slow = (jnp.arange(k) < n_slow).astype(jnp.float32)
+    elif rows == "tail":
+        is_slow = (jnp.arange(k) >= (k - n_slow)).astype(jnp.float32)
+    else:
+        raise ValueError(f"rows must be 'head' or 'tail', got {rows!r}")
+    return fl.base_delay + (fl.straggler_delay - fl.base_delay) * is_slow
+
+
+def sample_delays(scale, rng):
+    """Exponential arrival delays with per-client mean ``scale`` (same
+    shape).  A zero scale is an always-instant client."""
+    u = jax.random.uniform(rng, scale.shape, minval=1e-7, maxval=1.0)
+    return scale * (-jnp.log(u))
+
+
+def sample_arrivals(fl: FaultConfig, rng, n_clients: int):
+    """(K,) 0/1 arrival mask: client k arrives iff its exponential delay
+    (mean = its per-client scale) beats the deadline."""
+    delay = sample_delays(delay_scales(fl, n_clients), rng)
     return (delay <= fl.deadline).astype(jnp.float32)
 
 

@@ -28,51 +28,68 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import codecs as comm_codecs, error_feedback
-from repro.core import aggregation, attacks, driver as scan_driver, \
-    fairness, faults as faults_mod, fitness, selection, slots
+from repro.core import aggregation, attacks, clientstore, \
+    driver as scan_driver, fairness, faults as faults_mod, fitness, \
+    selection, slots
 
 
 class FedState(NamedTuple):
+    """Round carry of the synchronous engine.  Per-client persistent
+    columns (trust tracks, cum_selected, EF residuals, staleness,
+    failure counts) live in the nested ``clients`` ClientStore — the
+    sync engine is the M == K special case of the population-scale
+    store (core/clientstore.py); back-compat properties keep the old
+    ``state.trust`` / ``state.gate_trust`` / ``state.cum_selected`` /
+    ``state.ef`` read paths working."""
     params: Any               # global model w(t-1)
     team: jnp.ndarray         # (K,) 0/1 mask S_t
-    trust: jnp.ndarray        # (K,) EWMA trust
     alpha: jnp.ndarray        # current alpha (dynamic or fixed)
     slot: slots.SlotState
     h: jnp.ndarray            # h(t): reselect this round?
     rng: jnp.ndarray
     round: jnp.ndarray        # t (1-indexed)
-    cum_selected: jnp.ndarray  # (K,) times each client entered S_t
     cost_client_rounds: jnp.ndarray  # billed client-rounds (cost model)
     cost_bytes_up: jnp.ndarray    # MEASURED uplink bytes (encoded sizes)
     cost_bytes_down: jnp.ndarray  # MEASURED downlink bytes (dense model)
-    ef: Any = None            # per-client EF residual (compress != none)
-    gate_trust: Any = None    # (K,) EWMA trust from cosine-gate rejections
-                              # (1.0 = never gated; folds into fitness
-                              # scores when cfg.trust_in_fitness)
+    clients: clientstore.ClientStore = None  # (K,) per-client columns
+    attacker: Any = None      # stateful-attacker carry (cross-round
+                              # adaptive attacks read last round's gate
+                              # outcome from here; None = stateless)
+
+    @property
+    def trust(self):
+        return self.clients.trust
+
+    @property
+    def gate_trust(self):
+        return self.clients.gate_trust
+
+    @property
+    def cum_selected(self):
+        return self.clients.cum_selected
+
+    @property
+    def ef(self):
+        return self.clients.ef
 
 
-def init_state(params, n_clients, fed_cfg, rng):
-    ef = None
-    if getattr(fed_cfg, "compress", "none") != "none" \
-            and fed_cfg.error_feedback:
-        # (K, ...) residual matching the update tree the clients produce
-        ef = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((n_clients,) + p.shape, p.dtype), params)
+def init_state(params, n_clients, fed_cfg, rng, *, attacker=None):
+    store = clientstore.init_store(n_clients, params=params,
+                                   fed_cfg=fed_cfg)
+    att = attacker.init(n_clients) if attacker is not None else None
     return FedState(
         params=params,
         team=jnp.ones((n_clients,), jnp.float32),
-        trust=jnp.full((n_clients,), 0.5, jnp.float32),
         alpha=jnp.float32(fed_cfg.alpha),
         slot=slots.init_slot_state(),
         h=jnp.array(True),
         rng=rng,
         round=jnp.int32(1),
-        cum_selected=jnp.zeros((n_clients,), jnp.float32),
         cost_client_rounds=jnp.float32(0.0),
         cost_bytes_up=jnp.float32(0.0),
         cost_bytes_down=jnp.float32(0.0),
-        ef=ef,
-        gate_trust=jnp.ones((n_clients,), jnp.float32),
+        clients=store,
+        attacker=att,
     )
 
 
@@ -134,6 +151,8 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
     K = fed_cfg.n_clients
     mal = malicious if malicious is not None else jnp.zeros((K,), jnp.float32)
     codec = comm_codecs.make_codec(fed_cfg)
+    stateful_attack = getattr(update_attack, "stateful", False)
+    guard_on = getattr(fed_cfg, "update_guard", True)
     if faults is not None and not faults.active:
         faults_cfg = None                       # inactive == no injection
     else:
@@ -174,8 +193,16 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         updates = jax.tree_util.tree_map(
             lambda w_k, w: w_k - w[None], locals_, state.params)
 
+        att_carry = state.attacker
         if update_attack is not None:
-            updates = update_attack(updates, mal, r_upd)
+            if stateful_attack:
+                # cross-round adaptive attacker: reads last round's gate
+                # outcome from the carry, re-tunes its blend, and hands
+                # back the adapted carry (completed after the gate below)
+                updates, att_carry = update_attack(
+                    updates, mal, r_upd, state.attacker)
+            else:
+                updates = update_attack(updates, mal, r_upd)
 
         # ---- client->server transport (repro/comm/) ---------------------
         # the codec runs CLIENT-side, after the attacker corrupted its own
@@ -249,6 +276,25 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         # unavailable this round still contribute at stale_weight
         stale = fed_cfg.stale_weight * state.team * (1.0 - avail)
         part = jnp.clip(delivered + stale, 0.0, 1.0)
+
+        # ---- aggregation-boundary guard --------------------------------
+        # a crashed or hostile client delivering NaN/Inf or an
+        # absurd-norm update is REJECTED here — zeroed, masked out of
+        # every aggregation path (fused and reference), and penalised
+        # via the gate-trust EWMA below — instead of poisoning the
+        # global model.  On sane inputs the sanitise pass is a bitwise
+        # identity, so clean histories are unchanged.  Billing uses the
+        # PRE-rejection masks: the rejected client did the work and
+        # crossed the wire (billed-but-lost, like mid-round dropout).
+        part_pre, stale_pre = part, stale
+        rejected = jnp.zeros((K,), jnp.float32)
+        if guard_on:
+            updates, _, rejected = aggregation.sanitize_updates(
+                updates, (part > 0).astype(jnp.float32),
+                norm_mult=fed_cfg.guard_norm_mult)
+            delivered = delivered * (1.0 - rejected)
+            stale = stale * (1.0 - rejected)
+            part = jnp.clip(delivered + stale, 0.0, 1.0)
         if fed_cfg.paper_exact_agg:
             # Algorithm 1's size-proportional FedAvg step.  The paper
             # writes n_k/|S_t|, but data["n"] carries REAL partition
@@ -293,11 +339,20 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         cos = aggregation.cosine_to_ref(updates, agg)
         gated = ((cos < fed_cfg.cosine_outlier_thresh)
                  & (part > 0)).astype(jnp.float32)
+        # guard rejections count as gate failures too: the EWMA runs
+        # over PRE-rejection participants so a rejected delivery decays
+        # trust exactly like a cosine-gated one (bad == gated when no
+        # row was rejected, so clean histories are bit-identical)
+        bad = jnp.maximum(gated, rejected)
         new_gate_trust = jnp.where(
-            part > 0,
+            part_pre > 0,
             fed_cfg.trust_decay * state.gate_trust
-            + (1.0 - fed_cfg.trust_decay) * (1.0 - gated),
+            + (1.0 - fed_cfg.trust_decay) * (1.0 - bad),
             state.gate_trust)
+        if stateful_attack:
+            # complete the adaptive attacker's carry: it reads THIS
+            # round's gate outcome next round
+            att_carry = update_attack.observe(att_carry, bad)
 
         # cost accounting: FFA rounds bill every available client, slot
         # rounds the present team — PLUS, in both, the stale catch-up
@@ -310,15 +365,26 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         # actual wire sizes — dtype itemsizes, codes, scales, indices)
         billed = jnp.where(state.h, avail.sum(), team.sum())
         if not fed_cfg.paper_exact_agg:
-            billed = billed + (stale > 0).sum()
+            billed = billed + (stale_pre > 0).sum()
+        new_clients = state.clients._replace(
+            # fitness EWMA at compute time (the population-store prior;
+            # the sync selection path keeps using the fresh scores, so
+            # this column is bookkeeping, not a behavior change)
+            fitness=fed_cfg.trust_decay * state.clients.fitness
+            + (1.0 - fed_cfg.trust_decay) * scores,
+            trust=new_trust,
+            gate_trust=new_gate_trust,
+            staleness=jnp.where(part > 0, 0, state.clients.staleness + 1),
+            failures=state.clients.failures + rejected,
+            cum_selected=state.clients.cum_selected + team,
+            ef=new_ef)
         new_state = FedState(
-            params=new_params, team=team, trust=new_trust, alpha=alpha,
+            params=new_params, team=team, alpha=alpha,
             slot=new_slot, h=h_next, rng=rng, round=t + 1,
-            cum_selected=state.cum_selected + team,
             cost_client_rounds=state.cost_client_rounds + billed,
             cost_bytes_up=state.cost_bytes_up + billed * bytes_up_pc,
             cost_bytes_down=state.cost_bytes_down + billed * bytes_down_pc,
-            ef=new_ef, gate_trust=new_gate_trust)
+            clients=new_clients, attacker=att_carry)
         metrics = {
             "theta": th, "score": scores, "team": team, "alpha": alpha,
             "theta_team": theta_team, "h_next": h_next,
@@ -328,6 +394,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             # robustness / fairness block (scenario engine, ROADMAP item 5)
             "gate_trust": new_gate_trust,
             "gated_frac": gated.sum() / jnp.maximum(part.sum(), 1.0),
+            "guard_rejected": rejected.sum(),
             "fault_lost": lost.sum(),
             "fault_eff_epochs": eff_epochs.astype(jnp.float32).mean(),
             **fairness.round_fairness(ga, avail, state.cum_selected + team),
@@ -354,7 +421,9 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
     testing."""
     r_init, r_run = jax.random.split(rng)
     params = model.init(r_init)
-    state = init_state(params, fed_cfg.n_clients, fed_cfg, r_run)
+    att = update_attack if getattr(update_attack, "stateful", False) else None
+    state = init_state(params, fed_cfg.n_clients, fed_cfg, r_run,
+                       attacker=att)
     round_fn = make_round(model, fed_cfg, data_attack=data_attack,
                           update_attack=update_attack, malicious=malicious,
                           faults=faults)

@@ -83,6 +83,23 @@ def fedpow_select(local_losses, avail, d, m, rng, n=None):
     return ((sel_rank < m) & cand).astype(jnp.float32)
 
 
+def population_cohort(priority, d, rng, *, method="segmented", blk=4096):
+    """Population-scale cohort sampling: d of M clients WITHOUT
+    replacement, with probability proportional to ``priority`` (M,).
+
+    Same Efraimidis-Spirakis Gumbel-top-d trick as fedpow's candidate
+    draw above, but routed through the streaming O(M) top-d kernels
+    (``kernels/population_select.py``: segmented-XLA or blocked-Pallas
+    reduction) instead of a dense argsort — the path the buffered-async
+    engine samples a 64-client cohort from a million-row ClientStore
+    with.  Returns (d,) int32 population indices, descending key order
+    (identical across kernel engines, so swapping ``method`` preserves
+    scan==python bit-parity)."""
+    logw = jnp.log(jnp.maximum(priority.astype(jnp.float32), 1e-12))
+    from repro.kernels import population_select as ps
+    return ps.gumbel_topd(logw, d, rng, method=method, blk=blk)
+
+
 def participation_ratio(cum_selected):
     """Fraction of clients selected at least once (paper Table VI proxy)."""
     return (cum_selected > 0).mean()

@@ -60,7 +60,8 @@ def run_scenario_cli(args):
     rounds = min(args.steps, 50)        # SimEngine rounds, not LM steps
     summary, hist = run_scenario(
         args.scenario, n_clients=args.clients, n_rounds=rounds,
-        driver=args.driver, chunk_rounds=args.chunk_rounds)
+        driver=args.driver, chunk_rounds=args.chunk_rounds,
+        population=args.population, async_deadline=args.async_deadline)
     for h in hist:
         print(json.dumps({
             "round": int(h["round"]),
@@ -113,7 +114,28 @@ def main():
                          "round count and --clients the cohort size. "
                          "Prints per-round accuracy/trigger-accuracy/"
                          "fairness rows and the robustness summary")
+    ap.add_argument("--population", type=int, default=None,
+                    help="register this many clients in the population-"
+                         "scale ClientStore and route the --scenario run "
+                         "through the buffered-async engine "
+                         "(core/async_engine.py): each round samples a "
+                         "--clients-sized cohort by O(M) Gumbel-top-d "
+                         "over the store's fitness x trust priority; "
+                         "late deliveries retry through the staleness-"
+                         "weighted buffer. Only meaningful with "
+                         "--scenario")
+    ap.add_argument("--async-deadline", type=float, default=None,
+                    help="per-round delivery deadline of the buffered-"
+                         "async engine (the exponential client delays "
+                         "race it; FedConfig.async_deadline). Forces the "
+                         "--scenario cell through the async engine, like "
+                         "--population")
     args = ap.parse_args()
+
+    if (args.population or args.async_deadline) and not args.scenario:
+        ap.error("--population/--async-deadline drive the buffered-async "
+                 "SimEngine and need --scenario (e.g. "
+                 "--scenario async_hetero)")
 
     if args.scenario:
         run_scenario_cli(args)

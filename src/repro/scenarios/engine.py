@@ -11,13 +11,14 @@ stays at the target-class base rate, which is the regression signal.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS
-from repro.core import attacks, fedfits
+from repro.core import async_engine, attacks, fedfits
 from repro.data.pipeline import build_federation
 from repro.models.model import build
 from repro.scenarios import registry
@@ -56,6 +57,10 @@ def make_attack_fns(sc, fed_cfg, n_classes):
     elif a == "gate_aware":
         def update_attack(upd, mal, rng):
             return attacks.gate_aware(upd, mal, fed_cfg)
+    elif a == "cross_round":
+        # stateful: the round engines detect .stateful and thread the
+        # (blend, prev_gated) carry through the scan (FedState.attacker)
+        update_attack = attacks.CrossRoundGateAware(fed_cfg)
     elif a != "none":
         raise ValueError(f"unknown attack {a!r}")
     return data_attack, update_attack
@@ -64,8 +69,15 @@ def make_attack_fns(sc, fed_cfg, n_classes):
 def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
                  kind="tabular", n=1600, n_classes=10, sep=1.0,
                  dirichlet_alpha=1.0, arch=None, driver="scan",
-                 chunk_rounds=4):
+                 chunk_rounds=4, population=None, async_deadline=None):
     """Run one scenario cell; returns (summary dict, per-round history).
+
+    ``population`` / ``async_deadline`` (the launch CLI's --population /
+    --async-deadline) force the cell through the buffered-async engine
+    with that registered-client count / round deadline, overriding the
+    scenario's own async settings.  Async cells (``sc.async_mode``)
+    sample a cohort of ``n_clients`` per round from the M-row
+    ClientStore; ``n_clients`` is the COHORT size, not the population.
 
     ``sep`` defaults below the pipeline's easy-mode class separation: on
     the trivially-separable default every aggregator reaches ~1.0 within
@@ -79,16 +91,25 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
     axis).
     """
     sc = registry.get(scenario) if isinstance(scenario, str) else scenario
+    if population or async_deadline:
+        sc = sc.replace(
+            async_mode=True, population=population or sc.population,
+            fed=sc.fed + ((("async_deadline", float(async_deadline)),)
+                          if async_deadline else ()))
     fed_cfg = sc.fed_config(n_clients)
+    # async cells register a POPULATION of clients and sample the cohort
+    pop = (sc.population or 3 * n_clients) if sc.async_mode else n_clients
+    if sc.async_mode:
+        fed_cfg = dataclasses.replace(fed_cfg, population=pop)
     model = build(ARCHS[arch or
                         ("paper-cnn" if kind == "images" else "paper-mlp")])
     federation, server_test = build_federation(
-        seed, kind=kind, n=n, n_clients=n_clients, batch_size=32,
+        seed, kind=kind, n=n, n_clients=pop, batch_size=32,
         n_classes=n_classes, sep=sep, dirichlet_alpha=dirichlet_alpha)
 
-    n_mal = max(int(round(sc.mal_frac * n_clients)), 1) \
+    n_mal = max(int(round(sc.mal_frac * pop)), 1) \
         if sc.attack != "none" else 0
-    malicious = jnp.zeros((n_clients,)).at[jnp.arange(n_mal)].set(1.0) \
+    malicious = jnp.zeros((pop,)).at[jnp.arange(n_mal)].set(1.0) \
         if n_mal else None
     data_attack, update_attack = make_attack_fns(sc, fed_cfg, n_classes)
 
@@ -104,12 +125,23 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
         return {"test_acc": m["acc"], "trigger_acc": trig_acc}
 
     t0 = time.time()
-    state, hist = fedfits.run(
-        model, fed_cfg, federation.data_fn, n_rounds,
-        jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
-        data_attack=data_attack, update_attack=update_attack,
-        malicious=malicious, faults=sc.faults, driver=driver,
-        chunk_rounds=chunk_rounds)
+    if sc.async_mode:
+        state, hist = async_engine.run_async(
+            model, fed_cfg, federation.data, n_rounds,
+            jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
+            batch_size=federation.batch_size,
+            eval_batch=federation.eval_batch,
+            data_attack=data_attack, update_attack=update_attack,
+            malicious=malicious, faults=sc.faults,
+            straggler_rows=sc.straggler_rows, driver=driver,
+            chunk_rounds=chunk_rounds)
+    else:
+        state, hist = fedfits.run(
+            model, fed_cfg, federation.data_fn, n_rounds,
+            jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
+            data_attack=data_attack, update_attack=update_attack,
+            malicious=malicious, faults=sc.faults, driver=driver,
+            chunk_rounds=chunk_rounds)
     wall = time.time() - t0
     return summarize(sc, state, hist, n_mal, wall), hist
 

@@ -18,7 +18,8 @@ from repro.core.faults import FaultConfig
 
 DATA_ATTACKS = ("label_flip", "backdoor")
 UPDATE_ATTACKS = ("sign_flip", "gaussian", "scale",
-                  "alie", "min_max", "min_sum", "gate_aware")
+                  "alie", "min_max", "min_sum", "gate_aware",
+                  "cross_round")
 ATTACKS = ("none",) + DATA_ATTACKS + UPDATE_ATTACKS
 
 
@@ -47,6 +48,17 @@ class Scenario:
                                       # median-evasion prescription, which
                                       # is tuned for median defenses and
                                       # near-invisible to plain fedavg)
+    # buffered-async cells (core/async_engine.py)
+    async_mode: bool = False          # route through the async engine:
+                                      # cohort of n_clients SAMPLED from a
+                                      # population-scale ClientStore, late
+                                      # deliveries retried via the buffer
+    population: int = 0               # registered clients M (0 -> engine
+                                      # default of 3x the cohort)
+    straggler_rows: str = "tail"      # chronic-straggler placement; "head"
+                                      # makes the malicious rows (always
+                                      # the first ones) the stragglers —
+                                      # the late-poison evasion channel
     fed: Tuple[Tuple[str, object], ...] = ()  # extra FedConfig overrides
 
     def fed_config(self, n_clients: int) -> FedConfig:
@@ -69,6 +81,10 @@ class Scenario:
 _DROPOUT = FaultConfig(dropout_prob=0.3)
 _HETERO = FaultConfig(straggler_frac=0.25, straggler_delay=3.0,
                       partial_min_frac=0.5)
+# async cells: 30% chronic stragglers racing the round deadline, everyone
+# else mildly delayed — the graceful-degradation regime
+_LATE = FaultConfig(straggler_frac=0.3, straggler_delay=3.0,
+                    base_delay=0.3)
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     # ---- baselines --------------------------------------------------
@@ -115,12 +131,32 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     Scenario("gate_aware_int8_dropout", "defense-aware attacker + int8 "
              "uplink + mid-round dropout", attack="gate_aware",
              compress="int8", faults=_DROPOUT),
+    # ---- cross-round adaptive attacker (stateful; PR-5 follow-up) ----
+    Scenario("cross_round_trimmed", "stateful attacker probing the gate "
+             "across rounds (blend re-tuned from last round's gate "
+             "outcome) vs trimmed mean", attack="cross_round"),
+    # ---- buffered-async cells (population-scale ClientStore) ---------
+    Scenario("async_hetero", "buffered-async engine, 30% chronic "
+             "stragglers retried through the staleness-weighted buffer, "
+             "clean", async_mode=True, faults=_LATE),
+    Scenario("async_late_poison", "the colluders ARE the chronic "
+             "stragglers (straggler_rows=head): their cross-round poison "
+             "arrives LATE through the retry buffer at stale weight and "
+             "must not evade the threat-sized trimmed mean",
+             async_mode=True, attack="cross_round",
+             straggler_rows="head", faults=_LATE),
+    Scenario("async_late_poison_krum", "late-arriving stale-weight "
+             "poison vs threat-sized Krum", async_mode=True,
+             attack="cross_round", aggregator="krum",
+             straggler_rows="head", faults=_LATE),
 ]}
 
 
 def smoke_grid() -> Dict[str, Scenario]:
     """CI smoke matrix: {gate_aware, alie, none} x {trimmed_mean, krum,
-    fedavg} x {dropout on/off} -> 18 cells named grid/<a>+<agg>[+drop]."""
+    fedavg} x {dropout on/off} -> 18 cells named grid/<a>+<agg>[+drop],
+    plus 4 buffered-async cells (async/<a>+<agg>) running the
+    population-scale engine under 30% chronic stragglers."""
     cells = {}
     for atk in ("gate_aware", "alie", "none"):
         for agg in ("trimmed_mean", "krum", "fedavg"):
@@ -129,6 +165,14 @@ def smoke_grid() -> Dict[str, Scenario]:
                 cells[name] = Scenario(
                     name, "CI smoke-grid cell", attack=atk, aggregator=agg,
                     faults=_DROPOUT if drop else FaultConfig())
+    for atk, agg in (("none", "trimmed_mean"), ("none", "fedavg"),
+                     ("sign_flip", "trimmed_mean"),
+                     ("cross_round", "trimmed_mean")):
+        name = f"async/{atk}+{agg}"
+        cells[name] = Scenario(
+            name, "CI async smoke cell", attack=atk, aggregator=agg,
+            async_mode=True, faults=_LATE,
+            straggler_rows="head" if atk != "none" else "tail")
     return cells
 
 

@@ -233,6 +233,29 @@ def client_flat_specs(sizes, mesh, axes=("data", "model"), align=1):
     return tuple(specs), tuple(flags)
 
 
+def client_store_specs(store, mesh, axes=("data", "model")) -> Any:
+    """PartitionSpecs for the population-scale ClientStore
+    (core/clientstore.py): every (M,) per-client column shards its
+    population axis over the COMBINED ``axes`` extent when M divides it
+    (a million-row registry spreads evenly over all devices; the per-row
+    scalars have no other axis to shard), else the column replicates
+    (the sync engine's M == K == tens-of-clients case).  Optional
+    (M, ...)-leaved EF residual handles shard the same leading axis —
+    the trailing param dims stay unsharded, since gather/scatter of the
+    sampled cohort's rows is the only cross-shard traffic of the
+    selection path and row-wise layout keeps it a single-axis
+    all-gather."""
+    axes = tuple(axes)
+    size = _axis_size(mesh, axes)
+
+    def spec_for(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % size != 0:
+            return P(*([None] * leaf.ndim))
+        return P(axes, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(spec_for, store)
+
+
 def client_flat_shardings(sizes, mesh, axes=("data", "model")):
     """``client_flat_specs`` as concrete ``NamedSharding``s — the layout
     the sharded robust-aggregation path constrains its *inputs* to

@@ -1,0 +1,188 @@
+"""Population-scale ClientStore + O(M) Gumbel-top-d selection
+(core/clientstore.py, kernels/population_select.py,
+sharding.specs.client_store_specs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clientstore as cs
+from repro.kernels import population_select as ps
+
+
+# ----------------------------------------------------------------------
+# top-d engine parity: same indices, same (descending-key) order
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("m,d,blk", [
+    (1000, 8, 128),       # padded tail block
+    (1024, 16, 256),      # exact multiple
+    (50, 5, 4096),        # single block (blk > m)
+    (300, 7, 7),          # blk clamped to d
+])
+def test_topd_engines_agree(m, d, blk):
+    g = jax.random.normal(jax.random.PRNGKey(0), (m,))
+    ref = np.asarray(ps.topd_argsort(g, d))
+    for method in ("segmented", "pallas"):
+        got = np.asarray(ps.topd(g, d, method=method, blk=blk))
+        np.testing.assert_array_equal(got, ref, err_msg=method)
+
+
+def test_topd_degenerate_cohort_covers_population():
+    g = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    idx = np.asarray(ps.topd(g, 6, method="segmented", blk=4))
+    assert sorted(idx.tolist()) == list(range(6))
+    np.testing.assert_array_equal(idx, np.argsort(-np.asarray(g)))
+
+
+def test_topd_duplicate_keys_still_distinct_indices():
+    g = jnp.zeros((128,))
+    idx = np.asarray(ps.topd(g, 10, method="segmented", blk=32))
+    assert len(set(idx.tolist())) == 10
+
+
+def test_gumbel_topd_proportional_sampling():
+    """Efraimidis-Spirakis sanity: inclusion frequency tracks the weight
+    ratio (a 10x-weighted client appears far more often in a 2-of-20
+    cohort than a 1x one)."""
+    w = jnp.ones((20,)).at[3].set(10.0)
+    logw = jnp.log(w)
+    counts = np.zeros(20)
+    for s in range(300):
+        idx = np.asarray(ps.gumbel_topd(logw, 2, jax.random.PRNGKey(s)))
+        assert len(set(idx.tolist())) == 2      # without replacement
+        counts[idx] += 1
+    # P(include) = 10/29 + (19/29)(10/28) ~ 0.58 vs ~0.075 for the rest
+    others = np.delete(counts, 3)
+    assert counts[3] > 140
+    assert others.mean() < 40
+    assert counts[3] > 4 * others.mean()
+
+
+def test_gumbel_topd_engine_parity_same_rng():
+    """Same rng -> identical cohort across engines (the scan==python and
+    engine-swap bit-parity contract)."""
+    logw = jnp.log(jax.random.uniform(jax.random.PRNGKey(2), (500,),
+                                      minval=0.1))
+    r = jax.random.PRNGKey(7)
+    a = np.asarray(ps.gumbel_topd(logw, 12, r, method="argsort"))
+    b = np.asarray(ps.gumbel_topd(logw, 12, r, method="segmented", blk=64))
+    c = np.asarray(ps.gumbel_topd(logw, 12, r, method="pallas", blk=64))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+def test_topd_unknown_method():
+    with pytest.raises(ValueError):
+        ps.topd(jnp.zeros((8,)), 2, method="quickselect")
+
+
+# ----------------------------------------------------------------------
+# store init / gather / scatter helpers
+# ----------------------------------------------------------------------
+def test_init_store_shapes_and_priors():
+    st = cs.init_store(12)
+    assert st.population == 12
+    assert st.staleness.dtype == jnp.int32
+    assert float(st.trust[0]) == 0.5 and float(st.gate_trust[0]) == 1.0
+    assert st.ef is None
+
+
+def test_gather_pulls_cohort_rows():
+    st = cs.init_store(10)
+    st = st._replace(fitness=jnp.arange(10.0))
+    sub = cs.gather(st, jnp.asarray([7, 2, 9]))
+    assert np.asarray(sub.fitness).tolist() == [7.0, 2.0, 9.0]
+    assert sub.population == 3
+
+
+def test_record_selection_and_fitness():
+    st = cs.init_store(8)
+    idx = jnp.asarray([1, 4])
+    st = cs.record_selection(st, idx)
+    assert np.asarray(st.cum_selected).tolist() == \
+        [0, 1, 0, 0, 1, 0, 0, 0]
+    st = cs.record_fitness(st, idx, jnp.asarray([1.0, 0.0]), 0.8)
+    np.testing.assert_allclose(np.asarray(st.fitness)[[1, 4]],
+                               [0.8 * 0.5 + 0.2, 0.8 * 0.5], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st.fitness)[0], 0.5)
+
+
+def test_record_deliveries_staleness_semantics():
+    st = cs.init_store(6)
+    st = cs.record_deliveries(st, jnp.asarray([2, 5]),
+                              jnp.asarray([1.0, 0.0]))
+    # delivered row resets; everyone else (masked-off row 5 included) ages
+    assert np.asarray(st.staleness).tolist() == [1, 1, 0, 1, 1, 1]
+
+
+def test_record_failures_compounds_duplicates():
+    st = cs.init_store(5)
+    owners = jnp.asarray([3, 3, 1])
+    st = cs.record_failures(st, owners, jnp.asarray([1.0, 1.0, 0.0]),
+                            trust_penalty=0.7)
+    assert np.asarray(st.failures).tolist() == [0, 0, 0, 2, 0]
+    np.testing.assert_allclose(float(st.trust[3]), 0.5 * 0.7 * 0.7,
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(st.trust[1]), 0.5)   # masked off
+
+
+def test_record_gate_trust_population_ewma():
+    st = cs.init_store(4)
+    owners = jnp.asarray([0, 2])
+    st = cs.record_gate_trust(st, owners, jnp.asarray([1.0, 1.0]),
+                              jnp.asarray([1.0, 0.0]), decay=0.9)
+    gt = np.asarray(st.gate_trust)
+    np.testing.assert_allclose(gt[0], 0.9)      # gated -> decays
+    np.testing.assert_allclose(gt[2], 1.0)      # clean participant holds
+    np.testing.assert_allclose(gt[[1, 3]], 1.0)  # non-participants hold
+
+
+def test_selection_priority_routes_around_flaky_clients():
+    """The graceful-degradation routing loop: repeated failures decay
+    trust, which shrinks the Gumbel-top-d priority, which shrinks the
+    inclusion frequency."""
+    st = cs.init_store(16)
+    flaky = jnp.asarray([0, 1, 2, 3])
+    for _ in range(6):
+        st = cs.record_failures(st, flaky, jnp.ones((4,)))
+    pri = np.asarray(cs.selection_priority(st))
+    assert pri[:4].max() < 0.2 * pri[4:].min()
+    counts = np.zeros(16)
+    for s in range(200):
+        idx = np.asarray(cs.select_cohort(st, 4, jax.random.PRNGKey(s),
+                                          blk=8))
+        counts[idx] += 1
+    assert counts[:4].sum() < 0.25 * counts[4:].sum()
+    assert pri.min() >= 1e-12                   # no starvation floor
+
+
+def test_ef_residuals_allocated_under_compression():
+    from repro.configs.base import FedConfig
+    params = {"w": jnp.zeros((3, 2)), "b": jnp.zeros((2,))}
+    cfg = FedConfig(n_clients=4, compress="int8", error_feedback=True)
+    st = cs.init_store(7, params=params, fed_cfg=cfg)
+    assert st.ef["w"].shape == (7, 3, 2) and st.ef["b"].shape == (7, 2)
+
+
+# ----------------------------------------------------------------------
+# sharding layout
+# ----------------------------------------------------------------------
+def test_client_store_specs_population_axis():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import specs as sh
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    st = cs.init_store(8 * n_dev)
+    spec = sh.client_store_specs(st, mesh)
+    assert spec.fitness == P(("data", "model"))
+    assert spec.staleness == P(("data", "model"))
+    # a population that does not divide the axes extent replicates
+    if n_dev > 1:
+        odd = cs.init_store(8 * n_dev + 1)
+        assert sh.client_store_specs(odd, mesh).fitness == P(None)
+    # sharded store round-trips through device_put
+    named = sh.named(mesh, spec)
+    placed = jax.device_put(st, named)
+    np.testing.assert_array_equal(np.asarray(placed.trust),
+                                  np.asarray(st.trust))

@@ -1,0 +1,150 @@
+"""NaN/Inf/absurd-norm client-update guard (aggregation.sanitize_updates)
+and its wiring into the round loop: a crashed or hostile delivery must
+yield a rejected contribution + gate-trust hit, never a poisoned model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation
+
+
+def _tree(k, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "w": scale * jax.random.normal(key, (k, 4, 3)),
+        "b": scale * jax.random.normal(jax.random.fold_in(key, 1), (k, 5)),
+    }
+
+
+def test_clean_inputs_bitwise_passthrough():
+    upd = _tree(6)
+    mask = jnp.ones((6,))
+    clean, m, rej = aggregation.sanitize_updates(upd, mask)
+    assert float(rej.sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mask))
+    for a, b in zip(jax.tree_util.tree_leaves(clean),
+                    jax.tree_util.tree_leaves(upd)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("poison", [jnp.nan, jnp.inf, -jnp.inf])
+def test_nonfinite_rows_rejected_and_zeroed(poison):
+    upd = _tree(5)
+    upd["w"] = upd["w"].at[2, 0, 0].set(poison)
+    mask = jnp.ones((5,))
+    clean, m, rej = aggregation.sanitize_updates(upd, mask)
+    assert np.asarray(rej).tolist() == [0, 0, 1, 0, 0]
+    assert np.asarray(m).tolist() == [1, 1, 0, 1, 1]
+    assert np.all(np.asarray(clean["w"][2]) == 0.0)
+    assert np.all(np.asarray(clean["b"][2]) == 0.0)
+    assert np.all(np.isfinite(np.asarray(clean["w"])))
+
+
+def test_absurd_norm_rejected_but_plausible_attacks_pass():
+    upd = _tree(8)
+    # a 10x sign-flip style row stays (legitimate attack scenarios are
+    # the robust pipeline's job, not the guard's)...
+    upd["w"] = upd["w"].at[1].set(-10.0 * upd["w"][1])
+    # ...a 1e30 row does not
+    upd["w"] = upd["w"].at[3].set(1e30)
+    mask = jnp.ones((8,))
+    _, m, rej = aggregation.sanitize_updates(upd, mask)
+    assert np.asarray(rej).tolist() == [0, 0, 0, 1, 0, 0, 0, 0]
+    assert float(m[1]) == 1.0
+
+
+def test_norm_rule_disabled_keeps_finiteness_rule():
+    upd = _tree(4)
+    upd["w"] = upd["w"].at[0].set(1e30)
+    upd["b"] = upd["b"].at[1, 0].set(jnp.nan)
+    _, m, rej = aggregation.sanitize_updates(upd, jnp.ones((4,)),
+                                             norm_mult=0)
+    assert np.asarray(rej).tolist() == [0, 1, 0, 0]
+
+
+def test_masked_out_rows_never_counted_rejected():
+    upd = _tree(4)
+    upd["w"] = upd["w"].at[0].set(jnp.nan)
+    mask = jnp.asarray([0.0, 1.0, 1.0, 1.0])
+    _, m, rej = aggregation.sanitize_updates(upd, mask)
+    assert float(rej.sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mask))
+
+
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("agg", ["fedavg", "median", "trimmed_mean", "krum"])
+def test_aggregation_never_sees_the_poison(fused, agg):
+    """Both the fused and reference paths produce a finite aggregate with
+    NaN/Inf rows present — because the guard runs ahead of both."""
+    k = 8
+    upd = _tree(k)
+    upd["w"] = upd["w"].at[0].set(jnp.nan)
+    upd["b"] = upd["b"].at[1].set(jnp.inf)
+    mask = jnp.ones((k,))
+    cfg = FedConfig(n_clients=k, aggregator=agg, fused_agg=fused)
+    clean, m, rej = aggregation.sanitize_updates(upd, mask)
+    out = aggregation.aggregate(clean, jnp.ones((k,)), m, cfg)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_empty_after_rejection_cohort_yields_zero_update(fused):
+    """ALL deliveries poisoned -> empty-mask aggregation -> zero update
+    (the model simply holds for a round)."""
+    k = 4
+    upd = jax.tree_util.tree_map(lambda l: l * jnp.nan, _tree(k))
+    mask = jnp.ones((k,))
+    cfg = FedConfig(n_clients=k, aggregator="trimmed_mean", fused_agg=fused)
+    clean, m, rej = aggregation.sanitize_updates(upd, mask)
+    assert float(m.sum()) == 0.0 and float(rej.sum()) == k
+    out = aggregation.aggregate(clean, jnp.ones((k,)), m, cfg)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert np.all(np.asarray(leaf) == 0.0)
+
+
+def test_round_loop_rejects_and_penalizes_gate_trust():
+    """End-to-end through make_round: a client shipping NaNs never
+    reaches the model, and its gate_trust drops while honest clients'
+    hold."""
+    from repro.configs.registry import ARCHS
+    from repro.core import fedfits
+    from repro.data.pipeline import build_federation
+    from repro.models.model import build
+
+    K = 6
+    cfg = FedConfig(n_clients=K, algorithm="fedavg", aggregator="fedavg",
+                    local_epochs=1)
+    model = build(ARCHS["paper-mlp"])
+    fed, _ = build_federation(0, kind="tabular", n=600, n_clients=K,
+                              batch_size=16, n_classes=10, sep=1.0,
+                              dirichlet_alpha=1.0)
+    mal = jnp.zeros((K,)).at[0].set(1.0)
+
+    def nan_attack(upd, malicious, rng):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.where(
+                malicious.reshape((-1,) + (1,) * (l.ndim - 1)) > 0,
+                jnp.full_like(l, jnp.nan), l), upd)
+
+    state, hist = fedfits.run(model, cfg, fed.data_fn, 3,
+                              jax.random.PRNGKey(0),
+                              update_attack=nan_attack, malicious=mal,
+                              driver="python")
+    gt = np.asarray(state.gate_trust)
+    assert all(float(h["guard_rejected"]) == 1.0 for h in hist)
+    assert gt[0] < 0.8 and np.all(gt[1:] > 0.95)
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    # the rejected client's failure count tracks every rejected round
+    assert float(np.asarray(state.clients.failures)[0]) == len(hist)
+
+
+def test_guard_can_be_disabled():
+    upd = _tree(3)
+    upd["w"] = upd["w"].at[0].set(jnp.nan)
+    cfg = FedConfig(n_clients=3, update_guard=False)
+    assert cfg.update_guard is False  # config knob exists and plumbs

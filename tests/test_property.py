@@ -135,3 +135,72 @@ def test_all_unavailable_round_selects_nobody(algo, k, seed):
     avail = jnp.zeros((k,), jnp.float32)
     team = np.asarray(_select(algo, avail, jax.random.PRNGKey(seed)))
     assert float(team.sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# buffered-async engine invariants (core/async_engine.py)
+# ---------------------------------------------------------------------------
+@given(r=st.integers(1, 48), seed=st.integers(0, 500),
+       decay=st.floats(0.05, 1.0, allow_nan=False))
+def test_async_delivery_weights_are_convex(r, seed, decay):
+    """The staleness-weighted buffer's aggregation weights always form a
+    convex combination over the round's delivery set: entries in [0, 1],
+    summing to 1 (or all-zero for an empty round) — stale evidence can
+    shrink but never flip or inflate a contribution."""
+    from repro.core import async_engine
+    key = jax.random.PRNGKey(seed)
+    n_k = jax.random.uniform(key, (r,), minval=0.0, maxval=100.0)
+    trust = jax.random.uniform(jax.random.fold_in(key, 1), (r,))
+    age = jax.random.randint(jax.random.fold_in(key, 2), (r,), 0, 5)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (r,)) > 0.5
+            ).astype(jnp.float32)
+    w = np.asarray(async_engine.delivery_weights(
+        n_k, trust, mask, age, staleness_decay=decay))
+    assert np.all(w >= 0.0) and np.all(w <= 1.0 + 1e-6)
+    total = w.sum()
+    assert abs(total - 1.0) < 1e-4 or total < 1e-6
+    assert np.all(w * (1.0 - np.asarray(mask)) == 0.0)  # masked-out = 0
+
+
+@given(age=st.integers(0, 6), decay=st.floats(0.05, 1.0, allow_nan=False))
+def test_async_staleness_monotone(age, decay):
+    """An older buffered delivery never outweighs a fresh one of the same
+    owner (same n_k, same trust): decay^age is non-increasing in age."""
+    from repro.core import async_engine
+    n_k = jnp.asarray([10.0, 10.0])
+    trust = jnp.asarray([0.8, 0.8])
+    ages = jnp.asarray([0, age])
+    w = np.asarray(async_engine.delivery_weights(
+        n_k, trust, jnp.ones((2,)), ages, staleness_decay=decay))
+    assert w[0] >= w[1] - 1e-6
+
+
+@given(c=st.integers(1, 32), retries=st.integers(0, 4))
+def test_async_buffer_capacity_covers_worst_case(c, retries):
+    """B = C * max_retries: a cohort that is late EVERY round for its full
+    retry budget always fits (no eviction before retries run out)."""
+    from repro.configs.base import FedConfig
+    from repro.core import async_engine
+    cfg = FedConfig(n_clients=c, async_max_retries=retries)
+    b = async_engine.buffer_capacity(cfg)
+    assert b >= max(c * retries, 1)
+
+
+@given(k=st.integers(2, 12), bad=st.integers(0, 11),
+       seed=st.integers(0, 500))
+def test_guard_rejects_exactly_the_poisoned_row(k, bad, seed):
+    """sanitize_updates: clean random cohorts pass through bit-identically;
+    poisoning one row's single coordinate rejects exactly that row."""
+    bad = bad % k
+    key = jax.random.PRNGKey(seed)
+    upd = {"w": jax.random.normal(key, (k, 5))}
+    mask = jnp.ones((k,))
+    clean, m, rej = aggregation.sanitize_updates(upd, mask)
+    np.testing.assert_array_equal(np.asarray(clean["w"]),
+                                  np.asarray(upd["w"]))
+    assert float(rej.sum()) == 0.0
+    poisoned = {"w": upd["w"].at[bad, 0].set(jnp.nan)}
+    _, m2, rej2 = aggregation.sanitize_updates(poisoned, mask)
+    expect = np.zeros(k); expect[bad] = 1.0
+    np.testing.assert_array_equal(np.asarray(rej2), expect)
+    np.testing.assert_array_equal(np.asarray(m2), 1.0 - expect)

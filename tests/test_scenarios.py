@@ -44,12 +44,21 @@ def test_registry_defense_sized_to_threat():
 
 def test_smoke_grid_is_the_full_matrix():
     grid = smoke_grid()
-    assert len(grid) == 18     # 3 attacks x 3 aggregators x dropout on/off
-    assert set(g.attack for g in grid.values()) \
+    # 3 attacks x 3 aggregators x dropout on/off + 4 buffered-async cells
+    assert len(grid) == 22
+    sync = {n: g for n, g in grid.items() if not g.async_mode}
+    assert len(sync) == 18
+    assert set(g.attack for g in sync.values()) \
         == {"gate_aware", "alie", "none"}
-    assert set(g.aggregator for g in grid.values()) \
+    assert set(g.aggregator for g in sync.values()) \
         == {"trimmed_mean", "krum", "fedavg"}
-    assert sum(g.faults.dropout_active for g in grid.values()) == 9
+    assert sum(g.faults.dropout_active for g in sync.values()) == 9
+    asyn = {n: g for n, g in grid.items() if g.async_mode}
+    assert len(asyn) == 4
+    assert all(g.faults.stragglers_active for g in asyn.values())
+    # attacked async cells make the colluders the chronic stragglers
+    assert all((g.straggler_rows == "head") == (g.attack != "none")
+               for g in asyn.values())
 
 
 def test_get_unknown_scenario_raises_with_known_names():
