@@ -1,0 +1,79 @@
+"""Static analysis of the repo's jittable entry points — the invariant
+linter behind ``python -m repro.analysis.lint``.
+
+The performance and trustworthiness story of this codebase rests on
+structural invariants (no flatten materialization on the aggregation
+path, disciplined PRNG streams, live buffer donation, fp32 accumulation,
+bounded collectives, VMEM-sized kernels).  This package makes them
+checked facts on EVERY entry point instead of folklore enforced by
+copy-pasted jaxpr walkers in two tests:
+
+  traversal.py    shared recursive jaxpr walker (scan/cond/shard_map/
+                  pallas_call sub-jaxprs) + eqn provenance
+  hlo.py          shared compiled-HLO text parsing (collective bytes,
+                  input_output_alias maps) — launch/roofline.py routes
+                  through the same parser
+  report.py       Finding / EntryResult / Report (the CI JSON artifact)
+  rules.py        the rule registry (copy lint, rng discipline, donation
+                  audit, dtype discipline, Pallas VMEM budget,
+                  collective allowlists)
+  entrypoints.py  the audited entry points, built lazily at linter scale
+  lint.py         the CLI: ``--all | --entry NAME | --list``, JSON
+                  report, nonzero exit on findings (the CI gate)
+
+Rule-author guide
+-----------------
+
+**Registering an entry point** (entrypoints.py): decorate a zero-arg
+builder returning a :class:`~repro.analysis.entrypoints.Target`::
+
+    @register_entry("my_engine.make_step", min_devices=1,
+                    doc="one-line description for --list")
+    def _build():
+        fn, args = ...            # a jittable fn + SMALL example args
+        return Target(fn, args,
+                      donate_argnums=(0,),        # audit donation
+                      donate_must_alias=_must_alias(   # heavy carries that
+                          state, (".params", ".rng")),  # must reuse buffers
+                      copy_mode="engine",         # or "strict" / "off"
+                      copy_threshold=max_leaf,    # eqn size that counts
+                      collective_allowlist={},    # {} = none allowed
+                      check_rng_advance=True)     # carry rng must move
+
+Keep builders lazy (imports inside) and tiny — the invariants are
+structural, so linter-scale models keep ``--all`` cheap.  Entries whose
+invariants only bite on a mesh set ``min_devices``; the CLI skips them
+with a note on smaller hosts and the CI forced-4-device pass covers
+them.
+
+**Writing a rule** (rules.py): decorate a function over a
+:class:`~repro.analysis.rules.RuleContext`::
+
+    @register_rule("my_rule", kind="jaxpr")        # or kind="hlo"
+    def my_rule(ctx):
+        for jaxpr, eqn in traversal.all_eqns(ctx.jaxpr):
+            if bad(eqn):
+                ctx.finding("my_rule", "what broke and why it matters",
+                            eqn)                   # provenance attached
+
+``kind="hlo"`` rules read ``ctx.hlo_text`` (compiled module text; use
+``repro.analysis.hlo`` helpers) and are skipped when compilation is
+unavailable.  Emit ``ctx.note(...)`` for non-gating diagnostics (e.g.
+per-kernel VMEM estimates).  Per-entry opt-outs go through
+``Target.rules_off`` — prefer tightening the rule over opting out.
+
+**Setting a collective allowlist**: ``collective_allowlist`` maps
+collective kind -> max total per-chip operand bytes; kinds absent from
+the dict are forbidden outright, ``{}`` forbids all collectives, and
+``None`` disables the rule for that entry.  Derive caps from what the
+entry legitimately moves (e.g. (C,) partials + the (C, C) Gram for
+``aggregate_sharded``) with modest headroom — a param-sized operand
+crossing the interconnect should always trip the cap.
+
+Every rule must demonstrate BOTH directions in tests/test_analysis.py:
+silent on the clean entry points, firing on a deliberately violating
+twin program.
+"""
+from repro.analysis import hlo, report, traversal  # noqa: F401
+from repro.analysis.report import Finding, Report  # noqa: F401
+from repro.analysis.traversal import all_eqns, subjaxprs_of  # noqa: F401

@@ -1,0 +1,101 @@
+"""Shared compiled-HLO text helpers: shape/byte parsing, collective
+extraction, and input/output alias maps.
+
+One canonical parser for everything that reads ``compiled.as_text()``:
+the roofline derivation (launch/roofline.py), the sharded-aggregation
+collective guards (tests/test_sharded_agg.py), and the analysis rules
+(rules.collective_lint / rules.donation_audit).  Collective bytes come
+from the *partitioned* module, so they are per-chip; '-done' halves of
+async pairs are skipped to avoid double counting.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterator, List, NamedTuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+SHAPE_RE = re.compile(r"(pred|[fsu]\d+|bf16|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_COLL_RE = re.compile(r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+_ALIAS_RE = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9, ]*)\}:\s*\((\d+),\s*\{([0-9, ]*)\},?\s*([a-z-]*)\)")
+
+
+def shape_bytes(segment: str) -> int:
+    """Total bytes of every typed shape literal in an HLO text segment."""
+    total = 0
+    for dt, dims in SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class CollectiveOp(NamedTuple):
+    """One collective instruction: kind, operand bytes, source line."""
+    kind: str
+    bytes: int
+    line: str
+
+
+def iter_collectives(hlo_text: str) -> Iterator[CollectiveOp]:
+    """Every collective instruction of a partitioned HLO module, with its
+    per-chip operand bytes (the shape segment left of the op name)."""
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        yield CollectiveOp(m.group(2), shape_bytes(m.group(1)),
+                           line.strip())
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-chip bytes by collective kind from partitioned HLO text."""
+    out = {k: 0 for k in COLLECTIVES}
+    for op in iter_collectives(hlo_text):
+        out[op.kind] += op.bytes
+    return out
+
+
+class AliasEntry(NamedTuple):
+    """One input_output_alias map entry of a compiled module."""
+    output_index: tuple
+    param_number: int
+    param_index: tuple
+    kind: str                 # "may-alias" | "must-alias"
+
+
+def parse_input_output_aliases(hlo_text: str) -> List[AliasEntry]:
+    """The ``input_output_alias={ {out}: (param, {idx}, kind), ... }``
+    header of a compiled HLO module — the ground truth of whether buffer
+    donation actually took effect (a donated-but-unaliased parameter is
+    silently copied instead of reused)."""
+    m = _ALIAS_RE.search(hlo_text)
+    if not m:
+        return []
+    out = []
+    for om, pnum, pidx, kind in _ALIAS_ENTRY_RE.findall(m.group(1)):
+        to_tuple = lambda s: tuple(
+            int(x) for x in s.replace(" ", "").split(",") if x)
+        out.append(AliasEntry(to_tuple(om), int(pnum), to_tuple(pidx),
+                              kind or "may-alias"))
+    return out
+
+
+def aliased_param_numbers(hlo_text: str) -> set:
+    """Flat parameter numbers that alias some output buffer."""
+    return {e.param_number for e in parse_input_output_aliases(hlo_text)}

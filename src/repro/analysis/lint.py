@@ -1,0 +1,128 @@
+"""Entry-point audit CLI.
+
+  PYTHONPATH=src python -m repro.analysis.lint --all [--json report.json]
+  PYTHONPATH=src python -m repro.analysis.lint --entry aggregate --entry two_stage
+  PYTHONPATH=src python -m repro.analysis.lint --list
+
+Traces every registered entry point (repro/analysis/entrypoints.py) to
+its jaxpr and compiled HLO, runs the rule registry
+(repro/analysis/rules.py) over them, prints findings, and exits nonzero
+when any finding at/above --fail-on severity survives.  Entries needing
+more devices than available (e.g. aggregate_sharded) are SKIPPED with a
+note — the CI matrix runs both a plain-CPU and a forced-4-device pass so
+the collective rules always bite somewhere.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.analysis import entrypoints as ep
+from repro.analysis import rules as rules_mod
+from repro.analysis.report import SEV_NOTE, EntryResult, Report
+
+
+def audit_entry(entry: ep.EntryPoint) -> EntryResult:
+    """Trace + (best-effort) compile one entry and run every rule."""
+    result = EntryResult(entry=entry.name)
+    if jax.device_count() < entry.min_devices:
+        result.status = "skipped"
+        result.skipped_reason = (
+            f"needs >= {entry.min_devices} devices, have "
+            f"{jax.device_count()} (run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return result
+    target = entry.build()
+    jaxpr = jax.make_jaxpr(target.fn)(*target.args)
+    hlo_text = None
+    if target.compile:
+        try:
+            hlo_text = (jax.jit(target.fn,
+                                donate_argnums=target.donate_argnums)
+                        .lower(*target.args).compile().as_text())
+        except Exception as e:              # pragma: no cover - backend gaps
+            result.notes.append(f"compile unavailable: {type(e).__name__}: "
+                                f"{e}; hlo rules skipped")
+    ctx = rules_mod.RuleContext(
+        entry_name=entry.name, jaxpr=jaxpr, result=result,
+        hlo_text=hlo_text, copy_mode=target.copy_mode,
+        copy_threshold=target.copy_threshold,
+        collective_allowlist=target.collective_allowlist,
+        donate_must_alias=target.donate_must_alias,
+        check_rng_advance=target.check_rng_advance,
+        rules_off=target.rules_off)
+    return rules_mod.run_rules(ctx)
+
+
+def run(names=None) -> Report:
+    report = Report(meta={
+        "devices": jax.device_count(),
+        "backend": jax.default_backend(),
+        "rules": sorted(rules_mod.RULES),
+    })
+    for name, entry in ep.ENTRYPOINTS.items():
+        if names and name not in names:
+            continue
+        report.add(audit_entry(entry))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="jaxpr/HLO invariant linter over the registered "
+                    "entry points")
+    ap.add_argument("--all", action="store_true",
+                    help="audit every registered entry point")
+    ap.add_argument("--entry", action="append", default=[],
+                    help="audit one entry (repeatable); see --list")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entry points and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the JSON report here")
+    ap.add_argument("--fail-on", choices=["error", "note"],
+                    default="error",
+                    help="exit nonzero on findings at/above this severity")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, entry in ep.ENTRYPOINTS.items():
+            gate = (f" [>= {entry.min_devices} devices]"
+                    if entry.min_devices > 1 else "")
+            print(f"{name:32s} {entry.doc}{gate}")
+        return 0
+    if not args.all and not args.entry:
+        ap.error("pick --all, --entry NAME, or --list")
+    unknown = [n for n in args.entry if n not in ep.ENTRYPOINTS]
+    if unknown:
+        ap.error(f"unknown entries {unknown}; see --list")
+
+    report = run(set(args.entry) or None)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(report.to_json())
+
+    for res in report.results:
+        if res.status == "skipped":
+            print(f"SKIP {res.entry}: {res.skipped_reason}")
+            continue
+        mark = "FAIL" if res.findings else "ok  "
+        print(f"{mark} {res.entry}")
+        for note in res.notes:
+            print(f"       note: {note}")
+        for f in res.findings:
+            print(f"       {f}")
+
+    failing = report.errors() if args.fail_on == "error" \
+        else report.findings
+    n_err = len(failing)
+    n_skip = sum(r.status == "skipped" for r in report.results)
+    print(f"\n{len(report.results)} entries audited "
+          f"({n_skip} skipped), {n_err} finding(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

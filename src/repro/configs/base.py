@@ -221,6 +221,22 @@ class FedConfig:
     fedpow_m: int = 0                 # FedPow selected count m (0 -> K/2)
     fitness_every: int = 1            # rounds between fitness evaluations
 
+    def __post_init__(self):
+        # the buffered-async engine (population > 0) is dense-uplink
+        # only: EF residual columns must live behind the ClientStore
+        # boundary before a codec can ride the retry buffer. Catch the
+        # combination at config build so launch flags fail fast instead
+        # of deep inside make_async_round.
+        if self.population > 0 and self.compress != "none":
+            raise ValueError(
+                f"compress={self.compress!r} is not supported by the "
+                f"buffered-async engine (population={self.population}): "
+                "the codec's EF residuals are per-cohort scan-carry "
+                "columns, but async cohorts are resampled from the "
+                "ClientStore every round. Drop --population/"
+                "--async-deadline (sync engine supports every codec) or "
+                "set compress='none' for async runs.")
+
 
 @dataclass(frozen=True)
 class TrainConfig:

@@ -162,10 +162,14 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
     from repro.core import fedfits   # cycle-free: fedfits doesn't import us
 
     if getattr(fed_cfg, "compress", "none") != "none":
-        raise NotImplementedError(
-            "the buffered-async engine is dense-uplink only: EF residual "
-            "columns must live behind the ClientStore boundary before a "
-            "codec can ride the retry buffer")
+        # FedConfig.__post_init__ already rejects population>0 +
+        # compress; this guards duck-typed / hand-rolled configs too.
+        raise ValueError(
+            f"compress={fed_cfg.compress!r}: the buffered-async engine "
+            "is dense-uplink only (EF residual columns must live behind "
+            "the ClientStore boundary before a codec can ride the retry "
+            "buffer). Use the sync engine (fedfits.run) for compressed "
+            "uplink, or compress='none' here.")
     client_update = fedfits.make_client_update(model, fed_cfg)
     m = fed_cfg.population or fed_cfg.n_clients
     c = fed_cfg.n_clients

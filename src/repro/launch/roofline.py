@@ -12,47 +12,16 @@ to avoid double counting.
 """
 from __future__ import annotations
 
-import re
 from typing import Dict
 
+# HLO-text parsing lives in the shared analysis helpers; the roofline and
+# the invariant linter (repro/analysis/rules.py) read the same parser.
+from repro.analysis.hlo import (COLLECTIVES as _COLL,  # noqa: F401
+                                DTYPE_BYTES as _DTYPE_BYTES,
+                                SHAPE_RE as _SHAPE_RE,
+                                parse_collectives,
+                                shape_bytes as _shape_bytes)
 from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8,
-}
-
-_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-         "collective-permute")
-_SHAPE_RE = re.compile(r"(pred|[fsu]\d+|bf16|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
-
-
-def _shape_bytes(segment: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(segment):
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
-
-
-def parse_collectives(hlo_text: str) -> Dict[str, int]:
-    """Per-chip bytes by collective kind from partitioned HLO text."""
-    out = {k: 0 for k in _COLL}
-    for line in hlo_text.splitlines():
-        if "-done" in line:
-            continue
-        m = re.search(r"=\s*(.*?)\s(" + "|".join(_COLL) + r")(-start)?\(",
-                      line)
-        if not m:
-            continue
-        kind = m.group(2)
-        out[kind] += _shape_bytes(m.group(1))
-    return out
 
 
 def roofline(cost: dict, coll_bytes: Dict[str, int]) -> dict:

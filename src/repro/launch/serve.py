@@ -19,6 +19,29 @@ from repro.launch.mesh import make_host_mesh
 from repro.models.model import build
 
 
+def make_decode_step(model, *, temperature=1.0):
+    """One jittable autoregressive decode step: run the model on the last
+    token, then sample (temperature > 0) or argmax the next one.
+
+    Returns ``step(params, tok, cache, pos, key) -> (tok', cache', key')``
+    with the PRNG key advanced through ``jax.random.split`` every step —
+    the serving loop threads the returned key, never reusing one (this is
+    a registered entry point of ``repro.analysis``; the lint CLI audits
+    exactly that discipline)."""
+
+    def step(params, tok, cache, pos, key):
+        logits, cache = model.decode(params, {"tokens": tok}, cache, pos)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+        return nxt, cache, key
+
+    return step
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-lm")
@@ -46,7 +69,8 @@ def main():
     cache = model.init_cache(B, max_len, ring=args.ring, dtype=jnp.float32)
 
     prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode)
+    decode_step = jax.jit(make_decode_step(model,
+                                           temperature=args.temperature))
 
     t0 = time.time()
     logits, cache = prefill(params, {"tokens": prompts}, cache)
@@ -56,14 +80,8 @@ def main():
     out = [tok]
     t0 = time.time()
     for i in range(G - 1):
-        logits, cache = decode(params, {"tokens": tok}, cache,
-                               jnp.int32(P + i))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        tok, cache, key = decode_step(params, tok, cache,
+                                      jnp.int32(P + i), key)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
     decode_s = time.time() - t0

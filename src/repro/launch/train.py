@@ -75,7 +75,13 @@ def run_scenario_cli(args):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="The jittable entry points behind these flags (round "
+               "engines, aggregation kernels, codecs, decode step) are "
+               "statically audited — copy/RNG/donation/dtype/collective/"
+               "VMEM invariants — by `python -m repro.analysis.lint "
+               "--all` (see `--list` there for the entry registry); CI "
+               "gates on it.")
     ap.add_argument("--arch", default="tiny-lm")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -136,6 +142,19 @@ def main():
         ap.error("--population/--async-deadline drive the buffered-async "
                  "SimEngine and need --scenario (e.g. "
                  "--scenario async_hetero)")
+    if (args.population or args.async_deadline) and args.scenario:
+        from repro.scenarios import registry as scen_registry
+        try:
+            sc = scen_registry.get(args.scenario)
+        except Exception:
+            sc = None                 # unknown name: run_scenario reports it
+        if sc is not None and sc.compress != "none":
+            ap.error(f"--scenario {args.scenario} is a compressed-uplink "
+                     f"cell (compress={sc.compress}), but the buffered-"
+                     "async engine (--population/--async-deadline) is "
+                     "dense-uplink only — drop those flags to run the "
+                     "cell on the sync engine, or pick a dense cell "
+                     "(e.g. async_hetero)")
 
     if args.scenario:
         run_scenario_cli(args)

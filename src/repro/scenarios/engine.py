@@ -91,6 +91,13 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
     axis).
     """
     sc = registry.get(scenario) if isinstance(scenario, str) else scenario
+    if (population or async_deadline) and sc.compress != "none":
+        raise ValueError(
+            f"scenario {sc.name!r} uses compress={sc.compress!r}, which "
+            "the buffered-async engine does not support — drop "
+            "--population/--async-deadline (the sync engine runs every "
+            "codec cell) or pick a dense-uplink scenario (e.g. "
+            "async_hetero)")
     if population or async_deadline:
         sc = sc.replace(
             async_mode=True, population=population or sc.population,

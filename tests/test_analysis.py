@@ -1,0 +1,369 @@
+"""Both directions of every analysis rule (ISSUE 8 acceptance).
+
+Each rule in repro.analysis.rules must (a) stay silent on a clean
+program and (b) fire on a deliberately violating twin. Violations are
+small hand-built jaxprs/HLO snippets — mutation fixtures, not the real
+entry points (those are covered by the `analysis` CI job running
+``python -m repro.analysis.lint --all``).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import lint
+from repro.analysis import traversal as tv
+from repro.analysis.report import EntryResult
+from repro.analysis.rules import RULES, RuleContext, run_rules
+
+
+def _ctx(fn, args, **kw):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    res = EntryResult(entry="fixture")
+    return RuleContext(entry_name="fixture", jaxpr=jaxpr, result=res, **kw)
+
+
+def _findings(ctx, rule):
+    RULES[rule].fn(ctx)
+    return [f for f in ctx.result.findings if f.rule == rule]
+
+
+# --------------------------------------------------------------------- #
+# traversal                                                             #
+# --------------------------------------------------------------------- #
+
+def test_all_eqns_recurses_into_scan_bodies():
+    def scanny(x):
+        def body(c, _):
+            c = jnp.concatenate([c, c], axis=-1)[:, :x.shape[-1]]
+            return c, ()
+        out, _ = jax.lax.scan(body, x, None, length=2)
+        return out
+
+    jaxpr = jax.make_jaxpr(scanny)(jnp.ones((4, 8)))
+    prims = {e.primitive.name for _, e in tv.all_eqns(jaxpr)}
+    assert "scan" in prims and "concatenate" in prims
+
+
+def test_eqn_provenance_names_user_frame():
+    jaxpr = jax.make_jaxpr(lambda x: jnp.concatenate([x, x]))(jnp.ones(4))
+    eqn = next(e for _, e in tv.all_eqns(jaxpr)
+               if e.primitive.name == "concatenate")
+    assert "test_analysis.py:" in tv.eqn_provenance(eqn)
+
+
+# --------------------------------------------------------------------- #
+# copy lint                                                             #
+# --------------------------------------------------------------------- #
+
+def test_copy_lint_strict_fires_on_flatten_concat():
+    def flatten(tree):
+        return jnp.concatenate([l.ravel() for l in tree.values()])
+
+    tree = {"a": jnp.ones((4, 8)), "b": jnp.ones((16,))}
+    ctx = _ctx(flatten, (tree,), copy_mode="strict", copy_threshold=16)
+    f = _findings(ctx, "copy_lint")
+    assert f and "concatenate" in f[0].message
+    assert "test_analysis.py" in f[0].provenance
+
+
+def test_copy_lint_strict_silent_on_leaf_streaming():
+    def stream(tree, w):
+        return {k: jnp.einsum("c,c...->...", w, v) for k, v in tree.items()}
+
+    tree = {"a": jnp.ones((4, 8)), "b": jnp.ones((4, 16))}
+    ctx = _ctx(stream, (tree, jnp.ones(4)), copy_mode="strict",
+               copy_threshold=8)
+    assert not _findings(ctx, "copy_lint")
+
+
+def test_copy_lint_engine_allows_leading_axis_row_concat():
+    # the async delivery buffer's (rows, ...) stacking is legitimate
+    def buffer(rows, stack):
+        return jnp.concatenate([rows, stack], axis=0)
+
+    ctx = _ctx(buffer, (jnp.ones((3, 64)), jnp.ones((2, 64))),
+               copy_mode="engine", copy_threshold=64)
+    assert not _findings(ctx, "copy_lint")
+
+
+def test_copy_lint_engine_fires_on_minor_axis_concat():
+    def glue(a, b):
+        return jnp.concatenate([a, b], axis=-1)
+
+    ctx = _ctx(glue, (jnp.ones((3, 64)), jnp.ones((3, 64))),
+               copy_mode="engine", copy_threshold=64)
+    assert _findings(ctx, "copy_lint")
+
+
+def test_copy_lint_flags_transpose_fed_reshape_both_modes():
+    def relayout(x):
+        return x.T.reshape(-1)
+
+    for mode in ("strict", "engine"):
+        ctx = _ctx(relayout, (jnp.ones((16, 32)),), copy_mode=mode,
+                   copy_threshold=512)
+        f = _findings(ctx, "copy_lint")
+        assert f and "relayout" in f[0].message
+
+    # a plain reshape (no transpose producer) is a free view
+    ctx = _ctx(lambda x: x.reshape(-1), (jnp.ones((16, 32)),),
+               copy_mode="strict", copy_threshold=512)
+    assert not _findings(ctx, "copy_lint")
+
+
+# --------------------------------------------------------------------- #
+# rng discipline                                                        #
+# --------------------------------------------------------------------- #
+
+def test_rng_discipline_fires_on_key_reuse():
+    def reuse(key):
+        return (jax.random.normal(key, (4,))
+                + jax.random.uniform(key, (4,)))
+
+    ctx = _ctx(reuse, (jax.random.PRNGKey(0),))
+    f = _findings(ctx, "rng_discipline")
+    assert f and "consumed 2x" in f[0].message
+
+
+def test_rng_discipline_silent_on_split_derivation():
+    def clean(key):
+        k1, k2 = jax.random.split(key)
+        return (jax.random.normal(k1, (4,))
+                + jax.random.uniform(k2, (4,)))
+
+    ctx = _ctx(clean, (jax.random.PRNGKey(0),))
+    assert not _findings(ctx, "rng_discipline")
+
+
+def test_rng_discipline_sees_reuse_through_fold_in_chains():
+    def clean(key):
+        parts = [jax.random.normal(jax.random.fold_in(key, i), (4,))
+                 for i in range(3)]
+        return sum(parts)
+
+    ctx = _ctx(clean, (jax.random.PRNGKey(0),))
+    assert not _findings(ctx, "rng_discipline")
+
+    def dirty(key):
+        k = jax.random.fold_in(key, 7)
+        return jax.random.normal(k, (4,)) + jax.random.bernoulli(k, 0.5, (4,))
+
+    ctx = _ctx(dirty, (jax.random.PRNGKey(0),))
+    assert _findings(ctx, "rng_discipline")
+
+
+# --------------------------------------------------------------------- #
+# rng advance                                                           #
+# --------------------------------------------------------------------- #
+
+def test_rng_advance_fires_on_unadvanced_carry():
+    def stale(key, x):
+        return key, x * 2.0
+
+    ctx = _ctx(stale, (jax.random.PRNGKey(0), jnp.ones(4)),
+               check_rng_advance=True)
+    f = _findings(ctx, "rng_advance")
+    assert f and "unadvanced" in f[0].message
+
+
+def test_rng_advance_silent_on_advanced_carry():
+    def fresh(key, x):
+        return jax.random.fold_in(key, 1), x * 2.0
+
+    ctx = _ctx(fresh, (jax.random.PRNGKey(0), jnp.ones(4)),
+               check_rng_advance=True)
+    assert not _findings(ctx, "rng_advance")
+
+
+# --------------------------------------------------------------------- #
+# donation audit (hlo)                                                  #
+# --------------------------------------------------------------------- #
+
+def test_donation_audit_real_alias_and_real_drop():
+    x = jnp.ones((128,))
+
+    # in-place carry: XLA aliases param 0
+    good = jax.jit(lambda v: v + 1.0, donate_argnums=0) \
+        .lower(x).compile().as_text()
+    assert 0 in hlo_mod.aliased_param_numbers(good)
+    ctx = _ctx(lambda v: v + 1.0, (x,),
+               donate_must_alias=((0, ".params"),))
+    ctx.hlo_text = good
+    assert not _findings(ctx, "donation_audit")
+
+    # shape-shrinking output: the donation is silently dropped
+    bad = jax.jit(lambda v: v[:64] * 2.0, donate_argnums=0) \
+        .lower(x).compile().as_text()
+    assert 0 not in hlo_mod.aliased_param_numbers(bad)
+    ctx = _ctx(lambda v: v[:64] * 2.0, (x,),
+               donate_must_alias=((0, ".params"),))
+    ctx.hlo_text = bad
+    f = _findings(ctx, "donation_audit")
+    assert f and ".params" in f[0].message
+
+
+def test_alias_header_parsing():
+    txt = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, "
+           "may-alias), {2}: (3, {}, must-alias) }, "
+           "entry_computation_layout={...}\n")
+    entries = hlo_mod.parse_input_output_aliases(txt)
+    assert [(e.param_number, e.kind) for e in entries] == \
+        [(0, "may-alias"), (3, "must-alias")]
+    assert hlo_mod.aliased_param_numbers(txt) == {0, 3}
+    assert hlo_mod.parse_input_output_aliases("HloModule bare\n") == []
+
+
+# --------------------------------------------------------------------- #
+# dtype discipline                                                      #
+# --------------------------------------------------------------------- #
+
+def test_dtype_discipline_fires_on_half_accumulation():
+    # bf16 x bf16 contraction with a bf16 accumulator (jnp.sum would
+    # auto-upcast; dot_general keeps the operand dtype)
+    def half_mm(a, b):
+        return a @ b
+
+    ctx = _ctx(half_mm, (jnp.ones((8, 64), jnp.bfloat16),
+                         jnp.ones((64, 256), jnp.bfloat16)),
+               copy_threshold=2048)
+    f = _findings(ctx, "dtype_discipline")
+    assert f and "half-precision accumulation" in f[0].message
+
+
+def test_dtype_discipline_silent_on_fp32_accum_single_cast():
+    def clean(x):
+        return jnp.sum(x, axis=0).astype(jnp.bfloat16)
+
+    ctx = _ctx(clean, (jnp.ones((8, 256)),), copy_threshold=256)
+    assert not _findings(ctx, "dtype_discipline")
+
+
+def test_dtype_discipline_fires_on_midchain_round_trips():
+    def chatty(x):
+        y = x.astype(jnp.bfloat16)          # cast 1
+        return (y.astype(jnp.float32) * 2.0).astype(jnp.bfloat16)  # cast 2
+
+    ctx = _ctx(chatty, (jnp.ones((512,)),), copy_threshold=512)
+    f = _findings(ctx, "dtype_discipline")
+    assert f and "round-trips" in f[0].message
+
+
+# --------------------------------------------------------------------- #
+# pallas budget                                                         #
+# --------------------------------------------------------------------- #
+
+def _pallas_fn(shape, block, grid):
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        in_specs=[pl.BlockSpec(block, lambda i: (i, 0))],
+        out_specs=pl.BlockSpec(block, lambda i: (i, 0)),
+        grid=grid)
+
+
+def test_pallas_budget_notes_small_kernel():
+    fn = _pallas_fn((32, 128), (8, 128), (4,))
+    ctx = _ctx(fn, (jax.ShapeDtypeStruct((32, 128), jnp.float32),))
+    assert not _findings(ctx, "pallas_budget")
+    assert any("vmem~" in n for n in ctx.result.notes)
+
+
+def test_pallas_budget_fires_on_oversized_blocks():
+    # 2 x (in + out) x 8 MiB blocks = 32 MiB >> the 12 MiB budget
+    fn = _pallas_fn((4096, 1024), (2048, 1024), (2,))
+    ctx = _ctx(fn, (jax.ShapeDtypeStruct((4096, 1024), jnp.float32),))
+    f = _findings(ctx, "pallas_budget")
+    assert f and "exceeds" in f[0].message
+
+
+def test_pallas_budget_reports_lane_minor_blocks():
+    fn = _pallas_fn((32, 8), (8, 8), (4,))
+    ctx = _ctx(fn, (jax.ShapeDtypeStruct((32, 8), jnp.float32),))
+    assert not _findings(ctx, "pallas_budget")
+    assert any("lane-minor" in n for n in ctx.result.notes)
+
+
+# --------------------------------------------------------------------- #
+# collective lint (hlo)                                                 #
+# --------------------------------------------------------------------- #
+
+_HLO_ALLREDUCE = """\
+HloModule sharded
+  %p = f32[8]{0} parameter(0)
+  %r = f32[8]{0} all-reduce(f32[8]{0} %p), replica_groups={}
+"""
+_HLO_ALLGATHER = """\
+HloModule sharded
+  %p = f32[256,256]{1,0} parameter(0)
+  %g = f32[1024,256]{1,0} all-gather(f32[256,256]{1,0} %p), dimensions={0}
+"""
+
+
+def _hlo_ctx(text, allowlist):
+    ctx = _ctx(lambda x: x, (jnp.ones(1),),
+               collective_allowlist=allowlist)
+    ctx.hlo_text = text
+    return ctx
+
+
+def test_collective_lint_silent_under_cap():
+    ctx = _hlo_ctx(_HLO_ALLREDUCE, {"all-reduce": 1024})
+    assert not _findings(ctx, "collective_lint")
+    assert any("all-reduce=32B" in n for n in ctx.result.notes)
+
+
+def test_collective_lint_fires_on_forbidden_kind():
+    ctx = _hlo_ctx(_HLO_ALLGATHER, {"all-reduce": 1024})
+    f = _findings(ctx, "collective_lint")
+    assert f and "forbidden collective all-gather" in f[0].message
+
+
+def test_collective_lint_fires_over_cap():
+    ctx = _hlo_ctx(_HLO_ALLREDUCE, {"all-reduce": 8})
+    f = _findings(ctx, "collective_lint")
+    assert f and "caps it at 8" in f[0].message
+
+
+def test_collectives_parser_skips_done_halves():
+    txt = ("  %s = f32[64]{0} all-gather-start(f32[16]{0} %p)\n"
+           "  %d = f32[64]{0} all-gather-done(f32[64]{0} %s)\n")
+    out = hlo_mod.parse_collectives(txt)
+    assert out["all-gather"] == 64 * 4      # start counted once
+
+
+# --------------------------------------------------------------------- #
+# CLI / report plumbing                                                 #
+# --------------------------------------------------------------------- #
+
+def test_lint_cli_clean_entry_and_json_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = lint.main(["--entry", "aggregate", "--json", str(out)])
+    assert rc == 0
+    assert "ok   aggregate" in capsys.readouterr().out
+    data = json.loads(out.read_text())
+    assert data["summary"]["errors"] == 0
+    assert data["results"][0]["entry"] == "aggregate"
+
+
+def test_lint_cli_list_and_unknown_entry(capsys):
+    assert lint.main(["--list"]) == 0
+    assert "aggregate_sharded" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        lint.main(["--entry", "no_such_entry"])
+
+
+def test_run_rules_sets_findings_status():
+    ctx = _ctx(lambda a, b: jnp.concatenate([a, b], -1),
+               (jnp.ones((2, 8)), jnp.ones((2, 8))),
+               copy_mode="engine", copy_threshold=8)
+    res = run_rules(ctx)
+    assert res.status == "findings"
+    assert all(f.rule == "copy_lint" for f in res.findings)

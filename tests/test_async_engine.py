@@ -2,6 +2,8 @@
 parity with the delivery buffer + retry/backoff + faults active, billing
 invariants (billed-but-lost), graceful degradation under 30% stragglers,
 and the late-poison evasion channel."""
+import types
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -183,9 +185,13 @@ def test_late_poison_at_stale_weight_does_not_evade():
 
 
 def test_compression_unsupported():
+    # the combination fails fast at config build with the launch-flag fix
+    with pytest.raises(ValueError, match="buffered-async"):
+        _cfg(compress="int8")
+    # and the engine itself rejects duck-typed configs that sneak past
     model, fed, _ = _setup(4)
-    cfg = _cfg(compress="int8")
-    with pytest.raises(NotImplementedError):
+    cfg = types.SimpleNamespace(compress="int4")
+    with pytest.raises(ValueError, match="dense-uplink"):
         async_engine.make_async_round(model, cfg, fed.data)
 
 

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.traversal import all_eqns
 from repro.configs.base import FedConfig
 from repro.core import aggregation
 from repro.kernels.robust_pipeline import (auto_blk, fused_aggregate_tree,
@@ -157,26 +158,6 @@ def test_halfprec_leaves_match_fp32_oracle(agg):
                                    np.asarray(oracle[k]), atol=tol)
 
 
-def _all_eqns(jaxpr):
-    """All eqns of a jaxpr including nested call/control-flow sub-jaxprs."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs_of(v):
-                yield from _all_eqns(sub)
-
-
-def _subjaxprs_of(v):
-    import jax.core as jcore
-    if isinstance(v, jcore.ClosedJaxpr):
-        return [v.jaxpr]
-    if isinstance(v, jcore.Jaxpr):
-        return [v]
-    if isinstance(v, (list, tuple)):
-        return [j for item in v for j in _subjaxprs_of(item)]
-    return []
-
-
 def test_jaxpr_has_no_leaf_sized_concatenate():
     """Acceptance guard for the leaf-streaming rework: the jaxpr of
     ``fused_aggregate_tree`` on a multi-leaf tree must not materialise a
@@ -191,7 +172,7 @@ def test_jaxpr_has_no_leaf_sized_concatenate():
     )(tree, w, mask)
     min_leaf = min(int(l.size) for l in tree.values())
     big_concats = [
-        eqn for eqn in _all_eqns(jaxpr.jaxpr)
+        eqn for _, eqn in all_eqns(jaxpr)
         if eqn.primitive.name == "concatenate"
         and int(np.prod(eqn.outvars[0].aval.shape)) >= min_leaf]
     assert not big_concats, big_concats

@@ -12,6 +12,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlo import parse_collectives
+from repro.analysis.traversal import all_eqns
 from repro.configs.base import FedConfig
 from repro.core import aggregation
 
@@ -95,25 +97,6 @@ def test_sharded_gate_excises_sign_flipped_clients():
     assert np.all(np.asarray(out["w"]) > 0.5)
 
 
-def _all_eqns(jaxpr):
-    import jax.core as jcore
-
-    def subs(v):
-        if isinstance(v, jcore.ClosedJaxpr):
-            return [v.jaxpr]
-        if isinstance(v, jcore.Jaxpr):
-            return [v]
-        if isinstance(v, (list, tuple)):
-            return [j for item in v for j in subs(item)]
-        return []
-
-    for eqn in jaxpr.eqns:
-        yield jaxpr, eqn
-        for v in eqn.params.values():
-            for sub in subs(v):
-                yield from _all_eqns(sub)
-
-
 @multidevice
 def test_no_reshard_between_backward_and_shard_map():
     """ROADMAP open item 2: the per-client vmap'd backward's grad outputs
@@ -159,7 +142,7 @@ def test_no_reshard_between_backward_and_shard_map():
     team = jnp.ones((C,))
     jaxpr = jax.make_jaxpr(backward_and_agg)(params, batch, w, team)
 
-    shard_maps = [(j, e) for j, e in _all_eqns(jaxpr.jaxpr)
+    shard_maps = [(j, e) for j, e in all_eqns(jaxpr)
                   if e.primitive.name == "shard_map"]
     assert len(shard_maps) == 1
     j, eqn = shard_maps[0]
@@ -179,7 +162,7 @@ def test_no_reshard_between_backward_and_shard_map():
 
     txt = jax.jit(backward_and_agg).lower(params, batch, w, team) \
         .compile().as_text()
-    assert "all-to-all" not in txt
+    assert parse_collectives(txt)["all-to-all"] == 0
 
 
 @multidevice
