@@ -23,7 +23,6 @@ artifact CI uploads every run).
 from __future__ import annotations
 
 import functools
-import json
 import os
 import time
 
@@ -419,9 +418,12 @@ def main(budget="small"):
         else:
             extra = ""
         common.csv_row(r["name"], r["wall_s"], extra)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"# wrote {BENCH_JSON} ({len(results)} rows)", flush=True)
+    # non-destructive merge by row name: other benches' sections
+    # (robustness/* rows, driver rows from separate runs) survive no
+    # matter where this bench sits in benchmarks/run.py
+    merged = common.merge_rows(results, path=BENCH_JSON)
+    print(f"# wrote {BENCH_JSON} ({len(results)} kernel rows, "
+          f"{len(merged)} total)", flush=True)
 
 
 if __name__ == "__main__":

@@ -8,42 +8,21 @@ BENCH_kernels.json next to the kernel-perf trajectory.
 Budget small runs the curated cells at smoke sizes; ``--grid`` (the CI
 scenario-matrix job) runs the generated {gate_aware, alie, none} x
 {trimmed_mean, krum, fedavg} x {dropout on/off} smoke grid instead.
-Rows replace same-name rows from earlier runs; every other row in the
-JSON (kernel timings, other robustness cells) is preserved.
+Rows merge through ``common.merge_rows`` (replace same-name rows,
+preserve everything else), like every other bench.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 from benchmarks import common
+from benchmarks.common import merge_rows      # back-compat re-export
 from repro.scenarios import SCENARIOS, run_scenario, smoke_grid
-
-BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
 
 SIZES = {
     "small": dict(n_rounds=6, n=800),
     "full": dict(n_rounds=12, n=1600),
 }
-
-
-def merge_rows(rows, path=None):
-    """Replace same-name rows in the BENCH json, preserve everything else."""
-    path = path or BENCH_JSON
-    existing = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = []
-    new_names = {r["name"] for r in rows}
-    merged = [r for r in existing
-              if r.get("name") not in new_names] + rows
-    with open(path, "w") as f:
-        json.dump(merged, f, indent=2)
-    return merged
 
 
 def run_cells(cells, *, n_rounds, n, seed=0):
@@ -65,8 +44,8 @@ def main(budget="small", grid=False, only=None):
     names = [c for c in cells if only is None or only in c]
     rows = run_cells(names, **SIZES[budget])
     merged = merge_rows(rows)
-    print(f"# wrote {BENCH_JSON} ({len(rows)} robustness rows, "
-          f"{len(merged)} total)", flush=True)
+    print(f"# wrote {common.bench_json_path()} ({len(rows)} robustness "
+          f"rows, {len(merged)} total)", flush=True)
 
 
 if __name__ == "__main__":

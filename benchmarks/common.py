@@ -2,6 +2,8 @@
 synthetic stand-ins for MNIST / X-ray / Crop — the container is offline)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,6 +15,35 @@ from repro.configs.registry import ARCHS
 from repro.core import attacks, fedfits
 from repro.data.pipeline import build_federation
 from repro.models.model import build
+
+
+def bench_json_path() -> str:
+    """The shared BENCH artifact path (env override at CALL time, so a
+    test or CI job that sets BENCH_KERNELS_JSON after import still
+    lands in the right file)."""
+    return os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+
+def merge_rows(rows, path=None):
+    """Merge ``rows`` into the BENCH json NON-destructively: replace
+    same-name rows, preserve every other row (kernel timings, driver
+    rows, robustness cells from other benches).  EVERY bench writes
+    through this, so registration order in benchmarks/run.py can never
+    drop another bench's section."""
+    path = path or bench_json_path()
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    new_names = {r["name"] for r in rows}
+    merged = [r for r in existing
+              if r.get("name") not in new_names] + list(rows)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+    return merged
 
 
 def make_setup(kind="images", n_clients=10, n=2000, seed=0, n_classes=10,

@@ -18,9 +18,10 @@ BENCHES = [
     ("fig8_hyperparams", "benchmarks.bench_fig8_hyperparams"),
     ("fig10_dynamic_alpha", "benchmarks.bench_fig10_dynamic_alpha"),
     ("communication", "benchmarks.bench_communication"),
+    # order no longer matters for the JSON artifact: every bench merges
+    # its rows by section key through common.merge_rows (replace
+    # same-name rows, preserve the rest) instead of rewriting wholesale
     ("kernels", "benchmarks.bench_kernels"),
-    # after kernels: bench_kernels rewrites the JSON wholesale, scenarios
-    # merge their robustness/* rows into it
     ("scenarios", "benchmarks.bench_scenarios"),
 ]
 

@@ -34,6 +34,10 @@ class Target:
     check_rng_advance: bool = False
     rules_off: Tuple[str, ...] = ()
     compile: bool = True                # lower+compile for hlo-kind rules
+    hbm_pass_cap: Optional[float] = None   # fusion_count: max HBM-pass
+                                           # multiple of the payload
+    hbm_payload_bytes: int = 0             # one pass worth of bytes
+    hbm_bytes_threshold: int = 0           # min buffer size that counts
 
 
 @dataclasses.dataclass
@@ -58,6 +62,13 @@ def _leaf_sizes(tree):
     import jax
     return [int(l.size) for l in jax.tree_util.tree_leaves(tree)
             if hasattr(l, "size")]
+
+
+def _leaf_bytes(tree):
+    import jax
+    return sum(int(l.size) * int(l.dtype.itemsize)
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "size"))
 
 
 def _must_alias(state, prefixes):
@@ -107,9 +118,18 @@ def _build_aggregate():
     def fn(u, ww, m):
         return aggregation.aggregate(u, ww, m, cfg)
 
+    # fusion_count: one pass = the (C, ...) cohort update tree.  The CPU
+    # backend inlines the pallas rank-compare kernels, whose (C, C, leaf)
+    # comparison tensors put the fused baseline at ~C passes/leaf
+    # (measured 64.0x at this fixture scale) — the cap is a regression
+    # tripwire ~10% above: an un-fused mean path or an extra
+    # comparison-tensor materialization jumps it by ~C, far past the
+    # headroom, while run-to-run XLA jitter stays inside it.
     return Target(fn, (tree, w, mask), copy_mode="strict",
                   copy_threshold=min(_leaf_sizes(tree)),
-                  collective_allowlist={})
+                  collective_allowlist={},
+                  hbm_pass_cap=70.0, hbm_payload_bytes=_leaf_bytes(tree),
+                  hbm_bytes_threshold=128)
 
 
 @register_entry("two_stage", doc="cohort-batched two-stage aggregation")
@@ -131,9 +151,13 @@ def _build_two_stage():
     def fn(u, w, m):
         return aggregation.two_stage(u, w, m, cfg)
 
+    # two vmapped rank-compare stages (K-wide then G-wide) put the fused
+    # baseline at 15.3x payload on this backend; tripwire ~10% above.
     return Target(fn, (upd, sw, sm), copy_mode="strict",
                   copy_threshold=min(_leaf_sizes(upd)),
-                  collective_allowlist={})
+                  collective_allowlist={},
+                  hbm_pass_cap=17.0, hbm_payload_bytes=_leaf_bytes(upd),
+                  hbm_bytes_threshold=128)
 
 
 @register_entry("aggregate_sharded", min_devices=2,
@@ -170,12 +194,18 @@ def _build_aggregate_sharded():
     # rows at the boundary exit; all-to-all would mean the shard_map
     # entry resharded the flat axis — forbidden outright.
     payload = sum(_leaf_sizes(tree)) * 4
+    # partitioned module: per-chip shards cut the rank-compare tensors
+    # 4-fold but the shard_map exit re-replicates the aggregated rows
+    # (all-gather results are fresh buffers); measured 19.9x payload
+    # under the forced-4-device CI pass, tripwire ~10% above.
     return Target(fn, (tree, w, mask), copy_mode="strict",
                   copy_threshold=min(_leaf_sizes(tree)),
                   collective_allowlist={"all-reduce": 16 * 1024,
                                         "all-gather": payload,
                                         "reduce-scatter": payload,
-                                        "collective-permute": payload})
+                                        "collective-permute": payload},
+                  hbm_pass_cap=22.0, hbm_payload_bytes=_leaf_bytes(tree),
+                  hbm_bytes_threshold=128)
 
 
 # --------------------------------------------------------------------- #
@@ -282,6 +312,31 @@ def _build_pod_step():
                   collective_allowlist={}, check_rng_advance=True,
                   donate_must_alias=_must_alias(
                       state, (".params", ".opt_state", ".rng")))
+
+
+@register_entry("examples.async_healthcare.round",
+                doc="walkthrough async round with the telemetry column "
+                    "riding the donated carry")
+def _build_example_round():
+    import importlib.util
+    from pathlib import Path
+
+    # examples/ is not a package: load the walkthrough module from the
+    # repo root so the linter audits the EXACT round body users run —
+    # the telemetry counter column must not break carry donation.
+    path = (Path(__file__).resolve().parents[3]
+            / "examples" / "async_healthcare.py")
+    spec = importlib.util.spec_from_file_location(
+        "_example_async_healthcare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    round_fn, state = mod.make_telemetry_round()
+    return Target(round_fn, (state, {}), donate_argnums=(0,),
+                  copy_mode="engine",
+                  copy_threshold=max(_leaf_sizes(state.params)),
+                  collective_allowlist={}, check_rng_advance=True,
+                  donate_must_alias=_must_alias(
+                      state, (".params", ".rng", ".buf.upd")))
 
 
 # --------------------------------------------------------------------- #

@@ -71,6 +71,50 @@ def parse_collectives(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+class Materialization(NamedTuple):
+    """One ENTRY-computation kernel writing a fresh HBM buffer."""
+    op: str
+    bytes: int
+    line: str
+
+
+# ops whose "output" is a view/plumbing, not a fresh HBM buffer
+HBM_EXEMPT = frozenset({"parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast"})
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+
+
+def iter_materializations(hlo_text: str,
+                          min_bytes: int = 1) -> Iterator[Materialization]:
+    """Top-level instructions of the ENTRY computation that write a new
+    ``>= min_bytes`` buffer.  After fusion, every ENTRY-level instruction
+    is one kernel launch whose output round-trips through HBM — summing
+    their output bytes counts the HBM passes a program makes over its
+    working set.  The exempt set (parameters, constants, tuple plumbing,
+    bitcasts) produces views, not buffers; sub-computation bodies (fused
+    or called) never materialize at module scope and are skipped."""
+    in_entry = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not in_entry:
+            if s.startswith("ENTRY "):
+                in_entry = True
+            continue
+        if s.startswith("}"):
+            break
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in HBM_EXEMPT:
+            continue
+        b = shape_bytes(m.group(1))
+        if b >= min_bytes:
+            yield Materialization(op, b, s)
+
+
 class AliasEntry(NamedTuple):
     """One input_output_alias map entry of a compiled module."""
     output_index: tuple

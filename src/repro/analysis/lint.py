@@ -52,7 +52,10 @@ def audit_entry(entry: ep.EntryPoint) -> EntryResult:
         collective_allowlist=target.collective_allowlist,
         donate_must_alias=target.donate_must_alias,
         check_rng_advance=target.check_rng_advance,
-        rules_off=target.rules_off)
+        rules_off=target.rules_off,
+        hbm_pass_cap=target.hbm_pass_cap,
+        hbm_payload_bytes=target.hbm_payload_bytes,
+        hbm_bytes_threshold=target.hbm_bytes_threshold)
     return rules_mod.run_rules(ctx)
 
 

@@ -28,6 +28,10 @@ Rules shipped here:
                      lane-minor (minor dim < 128) block layouts are
                      reported as notes feeding the "(C,) lane-minor"
                      follow-up.
+``fusion_count``     HBM-pass budget over the compiled ENTRY computation:
+                     total bytes its kernels materialize, in multiples of
+                     the cohort update payload, stays under the entry's
+                     cap (a flatten/copy/re-sort chain doubles traffic).
 ``collective_lint``  per-entry byte allowlists over the compiled module's
                      collectives (e.g. aggregate_sharded may psum small
                      partials but never all-to-all).
@@ -83,6 +87,10 @@ class RuleContext:
                                             # alias (with their path labels)
     check_rng_advance: bool = False
     rules_off: tuple = ()                   # rule names disabled per entry
+    hbm_pass_cap: Optional[float] = None    # max HBM-pass multiple of the
+                                            # payload (fusion_count)
+    hbm_payload_bytes: int = 0              # one pass worth of bytes
+    hbm_bytes_threshold: int = 0            # min buffer size that counts
 
     def finding(self, rule, message, eqn=None, severity=SEV_ERROR):
         f = Finding(
@@ -455,7 +463,43 @@ def pallas_budget(ctx: RuleContext) -> None:
 
 
 # --------------------------------------------------------------------- #
-# 6. collective lint                                                    #
+# 6. fusion count                                                       #
+# --------------------------------------------------------------------- #
+
+@register_rule("fusion_count", kind="hlo")
+def fusion_count(ctx: RuleContext) -> None:
+    """The aggregation path stays fused: total bytes the ENTRY
+    computation's kernels write to HBM, measured in multiples of the
+    cohort update payload ("HBM passes"), must stay under the entry's
+    cap.  A fused trimmed-mean makes ~1 pass (the per-leaf cohort-axis
+    sort) plus the 1/C-sized aggregated outputs; a flatten+copy chain,
+    a re-sorted intermediate, or a dropped fusion roughly doubles the
+    traffic, so the cap catches the regression class PR 2's streaming
+    kernels were built to eliminate."""
+    if (ctx.hbm_pass_cap is None or not ctx.hbm_payload_bytes
+            or ctx.hlo_text is None):
+        return
+    floor = max(ctx.hbm_bytes_threshold, 1)
+    mats = list(hlo_mod.iter_materializations(ctx.hlo_text,
+                                              min_bytes=floor))
+    total = sum(m.bytes for m in mats)
+    passes = total / ctx.hbm_payload_bytes
+    ctx.note(f"hbm passes: {passes:.2f}x payload ({total}B over "
+             f"{len(mats)} kernels >= {floor}B, cap {ctx.hbm_pass_cap}x)")
+    if passes > ctx.hbm_pass_cap:
+        top = sorted(mats, key=lambda m: -m.bytes)[:3]
+        ctx.finding(
+            "fusion_count",
+            f"aggregation path materializes {passes:.2f}x the cohort "
+            f"payload in HBM ({total}B vs {ctx.hbm_payload_bytes}B "
+            f"payload across {len(mats)} kernels), cap "
+            f"{ctx.hbm_pass_cap}x: XLA is spilling intermediates — "
+            "largest: " + "; ".join(f"{m.op}:{m.bytes}B" for m in top),
+            None)
+
+
+# --------------------------------------------------------------------- #
+# 7. collective lint                                                    #
 # --------------------------------------------------------------------- #
 
 @register_rule("collective_lint", kind="hlo")

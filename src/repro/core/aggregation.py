@@ -98,6 +98,39 @@ def sanitize_updates(updates, mask, *, norm_mult=1e4):
     return clean, mask * okf, rejected
 
 
+def rejection_kinds(updates, mask, *, norm_mult=1e4):
+    """Telemetry readout of the guard's decision, split by KIND: returns
+    ``(nonfinite, norm)`` 0/1 (K,) vectors with ``nonfinite + norm ==
+    rejected`` of :func:`sanitize_updates` on the same inputs (a row
+    failing both counts as nonfinite — the finiteness rule fires first).
+    Shares its reductions with the guard itself, so inside one jit XLA
+    CSE makes the extra accounting free."""
+    k = mask.shape[0]
+    finite = jnp.ones((k,), bool)
+    sq = jnp.zeros((k,), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(updates):
+        f = leaf.reshape(k, -1).astype(jnp.float32)
+        ok = jnp.isfinite(f)
+        finite = finite & ok.all(axis=1)
+        sq = sq + jnp.sum(jnp.where(ok, f, 0.0) ** 2, axis=1)
+    norm = jnp.sqrt(sq)
+    good = finite & (mask > 0)
+    in_mask = mask > 0
+    nonfinite = (in_mask & ~finite).astype(jnp.float32)
+    if norm_mult and norm_mult > 0:
+        n_good = good.sum()
+        s = jnp.sort(jnp.where(good, norm, jnp.inf))
+        lo = jnp.floor(jnp.maximum(n_good - 1, 0) / 2).astype(jnp.int32)
+        hi = jnp.ceil(jnp.maximum(n_good - 1, 0) / 2).astype(jnp.int32)
+        med = 0.5 * (s[lo] + s[hi])
+        med = jnp.where(n_good > 0, med, 0.0)
+        sane = norm <= norm_mult * jnp.maximum(med, 1e-12)
+        norm_rej = (in_mask & finite & ~sane).astype(jnp.float32)
+    else:
+        norm_rej = jnp.zeros((k,), jnp.float32)
+    return nonfinite, norm_rej
+
+
 def weighted_mean(updates, weights, mask):
     w = normalize_weights(weights, mask)
 

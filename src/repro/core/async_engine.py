@@ -62,6 +62,8 @@ import jax.numpy as jnp
 from repro.comm import codecs as comm_codecs
 from repro.core import aggregation, clientstore, driver as scan_driver, \
     fairness, faults as faults_mod, fitness
+from repro.obs import counters as obs_counters
+from repro.obs.trace import annotate as obs_annotate
 
 _EPS = 1e-12
 
@@ -86,6 +88,8 @@ class AsyncState(NamedTuple):
     cost_bytes_up: jnp.ndarray
     cost_bytes_down: jnp.ndarray
     attacker: Any = None      # stateful-attacker carry (None = stateless)
+    tele: Any = None          # telemetry carry column (repro/obs/):
+                              # {counter name: f32 array}; None = obs off
 
     # summarize()-compat read paths (match FedState's properties)
     @property
@@ -197,10 +201,11 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
         buf = state.buf
 
         # ---- O(M) cohort sampling + O(C) gather ------------------------
-        idx = clientstore.select_cohort(
-            store, c, r_sel, method=fed_cfg.select_method)
-        store = clientstore.record_selection(store, idx)
-        rows = jax.tree_util.tree_map(lambda a: a[idx], pop_data)
+        with obs_annotate("selection"):
+            idx = clientstore.select_cohort(
+                store, c, r_sel, method=fed_cfg.select_method)
+            store = clientstore.record_selection(store, idx)
+            rows = jax.tree_util.tree_map(lambda a: a[idx], pop_data)
         kb, ke = jax.random.split(jax.random.fold_in(r_data, 3))
         bi = jax.random.randint(kb, (c, bsz), 0, cap)
         ei = jax.random.randint(ke, (c, esz), 0, ecap)
@@ -216,9 +221,10 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
         # ---- local training (vmapped cohort) ---------------------------
         eff = jnp.full((c,), fed_cfg.local_epochs, jnp.int32)
         keys = jax.random.split(r_cli, c)
-        locals_, (gl, ga, ll, la) = jax.vmap(
-            client_update, in_axes=(None, 0, 0, 0))(state.params, cdata,
-                                                    keys, eff)
+        with obs_annotate("client_update"):
+            locals_, (gl, ga, ll, la) = jax.vmap(
+                client_update, in_axes=(None, 0, 0, 0))(state.params,
+                                                        cdata, keys, eff)
         updates = jax.tree_util.tree_map(
             lambda w_k, w: w_k - w[None], locals_, state.params)
         att_carry = state.attacker
@@ -246,23 +252,25 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
                                            fed_cfg.trust_decay)
 
         # ---- the delivery race -----------------------------------------
-        delay = faults_mod.sample_delays(
-            scales_pop[idx], jax.random.fold_in(r_delay, 11)) \
-            if fl.stragglers_active else jnp.zeros((c,), jnp.float32)
-        on_time = (delay <= deadline).astype(jnp.float32)
-        late = 1.0 - on_time
+        with obs_annotate("delivery"):
+            delay = faults_mod.sample_delays(
+                scales_pop[idx], jax.random.fold_in(r_delay, 11)) \
+                if fl.stragglers_active else jnp.zeros((c,), jnp.float32)
+            on_time = (delay <= deadline).astype(jnp.float32)
+            late = 1.0 - on_time
 
-        # ---- buffer maturity: which parked rows land this round? -------
-        # a row aged a listens for window = deadline * backoff^a (capped
-        # backoff: a <= max_retries by construction); if its residual
-        # delay fits, it is DUE and delivers at staleness-decayed weight;
-        # if not and its retries are spent it is ABANDONED (failure);
-        # otherwise it consumes the window and ages one round.
-        window = deadline * backoff ** buf.age.astype(jnp.float32)
-        due = buf.active * (buf.remaining <= window).astype(jnp.float32)
-        exhausted = buf.active * (1.0 - due) \
-            * (buf.age >= retries).astype(jnp.float32)
-        still = buf.active * (1.0 - due) * (1.0 - exhausted)
+            # ---- buffer maturity: which parked rows land this round? ---
+            # a row aged a listens for window = deadline * backoff^a
+            # (capped backoff: a <= max_retries by construction); if its
+            # residual delay fits, it is DUE and delivers at staleness-
+            # decayed weight; if not and its retries are spent it is
+            # ABANDONED (failure); otherwise it consumes the window and
+            # ages one round.
+            window = deadline * backoff ** buf.age.astype(jnp.float32)
+            due = buf.active * (buf.remaining <= window).astype(jnp.float32)
+            exhausted = buf.active * (1.0 - due) \
+                * (buf.age >= retries).astype(jnp.float32)
+            still = buf.active * (1.0 - due) * (1.0 - exhausted)
 
         # ---- staleness-weighted aggregation over fresh ∪ due -----------
         all_upd = jax.tree_util.tree_map(
@@ -278,12 +286,22 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
 
         rejected = jnp.zeros_like(mask_pre)
         mask = mask_pre
+        g_nonfinite = g_norm = jnp.float32(0.0)
         if guard_on:
-            all_upd, mask, rejected = aggregation.sanitize_updates(
-                all_upd, mask_pre, norm_mult=fed_cfg.guard_norm_mult)
-        agg = aggregation.aggregate(all_upd, w_raw, mask, fed_cfg)
-        new_params = jax.tree_util.tree_map(
-            lambda p, u: p + u.astype(p.dtype), state.params, agg)
+            if state.tele is not None:
+                # guard rejections split by kind — shares the guard's own
+                # reductions (CSE), a pure readout
+                nf, nr = aggregation.rejection_kinds(
+                    all_upd, mask_pre, norm_mult=fed_cfg.guard_norm_mult)
+                g_nonfinite, g_norm = nf.sum(), nr.sum()
+            with obs_annotate("sanitize"):
+                all_upd, mask, rejected = aggregation.sanitize_updates(
+                    all_upd, mask_pre, norm_mult=fed_cfg.guard_norm_mult)
+        with obs_annotate("aggregate"):
+            agg = aggregation.aggregate(all_upd, w_raw, mask, fed_cfg)
+        with obs_annotate("writeback"):
+            new_params = jax.tree_util.tree_map(
+                lambda p, u: p + u.astype(p.dtype), state.params, agg)
 
         # ---- cosine gate + trust bookkeeping ---------------------------
         cos = aggregation.cosine_to_ref(all_upd, agg)
@@ -357,13 +375,44 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
         bytes_down_pc = comm_codecs.param_bytes(state.params)
         billed = jnp.float32(c)
 
+        # ---- telemetry readout (repro/obs/) -----------------------------
+        # pure readouts of values the round already produced; nothing
+        # downstream reads them back, so on/off runs are bit-identical
+        new_tele, obs_metrics = state.tele, {}
+        if state.tele is not None:
+            wm = w_raw * mask
+            vals = {
+                "gate/cosine_rejected": gated.sum(),
+                "guard/nonfinite": g_nonfinite,
+                "guard/norm": g_norm,
+                "select/team_size": jnp.float32(c),
+                "delivery/on_time": on_time.sum(),
+                "delivery/late": late.sum(),
+                "buffer/occupancy": new_buf.active.sum(),
+                "buffer/parked": (late - overflow).sum(),
+                "buffer/overflow": overflow.sum(),
+                "buffer/exhausted": exhausted.sum(),
+                "buffer/age_hist": obs_counters.age_histogram(
+                    new_buf.age, new_buf.active, fed_cfg),
+                "agg/fresh_mass": wm[:c].sum(),
+                "agg/stale_mass": wm[c:].sum(),
+                "cohort/trust_q": obs_counters.quantiles(new_tr),
+                "cohort/gate_trust_q": obs_counters.quantiles(
+                    store.gate_trust[idx]),
+                "cohort/fitness_q": obs_counters.quantiles(scores),
+                "wire/bytes_up": billed * bytes_up_pc,
+                "wire/bytes_down": billed * bytes_down_pc,
+            }
+            new_tele = obs_counters.accumulate(state.tele, vals, "async")
+            obs_metrics = obs_counters.metric_keys(vals)
+
         new_state = AsyncState(
             params=new_params, clients=store, buf=new_buf, rng=rng,
             round=t + 1,
             cost_client_rounds=state.cost_client_rounds + billed,
             cost_bytes_up=state.cost_bytes_up + billed * bytes_up_pc,
             cost_bytes_down=state.cost_bytes_down + billed * bytes_down_pc,
-            attacker=att_carry)
+            attacker=att_carry, tele=new_tele)
         metrics = {
             "team_size": jnp.float32(c),
             "on_time_frac": on_time.mean(),
@@ -377,6 +426,7 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
             "score": scores, "alpha": alpha,
             "global_loss_mean": gl.mean(), "local_loss_mean": ll.mean(),
             **fairness.round_fairness(ga, ones_c, store.cum_selected),
+            **obs_metrics,
         }
         return new_state, metrics
 
@@ -386,7 +436,8 @@ def make_async_round(model, fed_cfg, pop_data, *, batch_size=32,
 def run_async(model, fed_cfg, pop_data, n_rounds, rng, *, eval_fn=None,
               batch_size=32, eval_batch=32, data_attack=None,
               update_attack=None, malicious=None, faults=None,
-              straggler_rows="tail", driver="scan", chunk_rounds=4):
+              straggler_rows="tail", driver="scan", chunk_rounds=4,
+              telemetry=None):
     """Drive ``n_rounds`` buffered-async rounds; returns (state, history).
 
     Mirrors ``fedfits.run``: driver="scan" goes through the shared
@@ -399,6 +450,11 @@ def run_async(model, fed_cfg, pop_data, n_rounds, rng, *, eval_fn=None,
     att = update_attack if getattr(update_attack, "stateful", False) \
         else None
     state = init_async_state(params, fed_cfg, r_run, attacker=att)
+    if telemetry is not None:
+        telemetry.bind_engine("async")
+        if telemetry.counters:
+            state = state._replace(
+                tele=obs_counters.init_column("async", fed_cfg))
     round_fn = make_async_round(
         model, fed_cfg, pop_data, batch_size=batch_size,
         eval_batch=eval_batch, data_attack=data_attack,
@@ -409,11 +465,16 @@ def run_async(model, fed_cfg, pop_data, n_rounds, rng, *, eval_fn=None,
         round_jit = jax.jit(round_fn)
         history = []
         for t in range(1, n_rounds + 1):
+            w0 = telemetry.now_us() if telemetry is not None else 0.0
             state, metrics = round_jit(state, {})
             row = {k: jax.device_get(v) for k, v in metrics.items()}
             if eval_fn is not None:
                 row.update(jax.device_get(eval_fn(state.params)))
             row["round"] = t
+            if telemetry is not None:
+                # device_get above synced, so the window is a real
+                # per-round host measurement under this driver
+                telemetry.observe_rows([row], w0, telemetry.now_us() - w0)
             history.append(row)
         return state, history
     if driver != "scan":
@@ -428,4 +489,4 @@ def run_async(model, fed_cfg, pop_data, n_rounds, rng, *, eval_fn=None,
 
     return scan_driver.run_chunked(
         body, state, lambda t: {}, n_rounds, chunk_steps=chunk_rounds,
-        t0=1, index_key="round")
+        t0=1, index_key="round", telemetry=telemetry)

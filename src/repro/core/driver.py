@@ -108,35 +108,60 @@ class ScanDriver:
 
     def run(self, state, batch_fn, n_steps, *, t0: int = 0,
             index_key: str = "step",
-            on_chunk: Optional[Callable[[Any, list], None]] = None):
+            on_chunk: Optional[Callable[[Any, list], None]] = None,
+            telemetry=None):
         """Drive ``n_steps`` steps starting at ``t0``.  ``batch_fn(t)``
         is a host callable returning one batch dict.  Returns
         ``(final_state, history)`` — one row dict per step, each carrying
         its step index under ``index_key``.  ``on_chunk(state, rows)``
-        fires after every chunk (logging / checkpoint hook)."""
+        fires after every chunk (logging / checkpoint hook).
+
+        ``telemetry`` (an ``repro.obs.Telemetry``) observes the drained
+        rows at the same boundary and — when tracing — gets the host-
+        MEASURED per-chunk window (dispatch -> drain; the existing
+        ``device_get`` is the sync point, so tracing adds none)."""
         end = t0 + n_steps
 
         def steps_of(s0):
             return list(range(s0, min(s0 + self.chunk_steps, end)))
 
         history = []
+        if telemetry is not None:
+            telemetry.begin("stage")
         pending = (steps_of(t0), *self.stage(batch_fn, steps_of(t0))) \
             if n_steps >= 1 else None
+        if telemetry is not None:
+            telemetry.end("stage", steps=len(pending[0]) if pending else 0)
         next_t0 = t0 + self.chunk_steps
         while pending is not None:
             ts, ts_dev, stacked = pending
+            w0 = telemetry.now_us() if telemetry is not None else 0.0
             # dispatch is async: the scan runs while the next chunk stages
             state, mets = self._scan(state, ts_dev, stacked)
+            if telemetry is not None and next_t0 < end:
+                telemetry.begin("stage")
             pending = (steps_of(next_t0),
                        *self.stage(batch_fn, steps_of(next_t0))) \
                 if next_t0 < end else None
+            if telemetry is not None and pending is not None:
+                telemetry.end("stage", steps=len(pending[0]))
             next_t0 += self.chunk_steps
             mets = jax.device_get(mets)            # one sync per chunk
+            w1 = telemetry.now_us() if telemetry is not None else 0.0
             rows = []
             for j, t in enumerate(ts):
                 row = {k: v[j] for k, v in mets.items()}
                 row[index_key] = t
                 rows.append(row)
+            if telemetry is not None:
+                # the measured chunk window: scan dispatch through metric
+                # drain; per-round phase spans inside it are attributed
+                # (see obs/trace.py)
+                if telemetry.tracer is not None:
+                    telemetry.tracer.span(
+                        "chunk", w0, w1 - w0, tid=0,
+                        steps=len(ts), first=ts[0], last=ts[-1])
+                telemetry.observe_rows(rows, w0, w1 - w0)
             if on_chunk is not None:
                 on_chunk(state, rows)
             history.extend(rows)
@@ -145,9 +170,9 @@ class ScanDriver:
 
 def run_chunked(body, state, batch_fn, n_steps, *, chunk_steps=8, t0=0,
                 batch_sharding=None, index_key="step", on_chunk=None,
-                donate=True):
+                donate=True, telemetry=None):
     """One-shot convenience wrapper: build a ``ScanDriver`` and run it."""
     drv = ScanDriver(body, chunk_steps=chunk_steps,
                      batch_sharding=batch_sharding, donate=donate)
     return drv.run(state, batch_fn, n_steps, t0=t0, index_key=index_key,
-                   on_chunk=on_chunk)
+                   on_chunk=on_chunk, telemetry=telemetry)

@@ -31,6 +31,8 @@ from repro.comm import codecs as comm_codecs, error_feedback
 from repro.core import aggregation, attacks, clientstore, \
     driver as scan_driver, fairness, faults as faults_mod, fitness, \
     selection, slots
+from repro.obs import counters as obs_counters
+from repro.obs.trace import annotate as obs_annotate
 
 
 class FedState(NamedTuple):
@@ -55,6 +57,10 @@ class FedState(NamedTuple):
     attacker: Any = None      # stateful-attacker carry (cross-round
                               # adaptive attacks read last round's gate
                               # outcome from here; None = stateless)
+    tele: Any = None          # telemetry carry column (repro/obs/):
+                              # {counter name: f32 array}; None = obs off
+                              # (the round body branches statically, so
+                              # off-runs trace the exact pre-obs program)
 
     @property
     def trust(self):
@@ -187,9 +193,10 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         else:
             eff_epochs = jnp.full((K,), fed_cfg.local_epochs, jnp.int32)
         keys = jax.random.split(r_cli, K)
-        locals_, (gl, ga, ll, la) = jax.vmap(
-            client_update, in_axes=(None, 0, 0, 0))(state.params, data,
-                                                    keys, eff_epochs)
+        with obs_annotate("client_update"):
+            locals_, (gl, ga, ll, la) = jax.vmap(
+                client_update, in_axes=(None, 0, 0, 0))(state.params, data,
+                                                        keys, eff_epochs)
         updates = jax.tree_util.tree_map(
             lambda w_k, w: w_k - w[None], locals_, state.params)
 
@@ -239,24 +246,26 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             scores = scores * state.gate_trust
 
         # ---- selection (only when h(t): FFA/NAT rounds) ------------------
-        if fed_cfg.algorithm == "fedfits":
-            new_team = selection.fedfits_select(
-                scores, fed_cfg.beta, avail, r_sel,
-                floor_prob=fed_cfg.participation_floor,
-                explore_eps=fed_cfg.explore_eps)
-            new_team = jnp.where(t == 1, avail, new_team)
-            team = jnp.where(state.h, new_team, state.team * avail)
-        elif fed_cfg.algorithm == "fedavg":
-            team = selection.fedavg_select(avail)
-        elif fed_cfg.algorithm == "fedrand":
-            team = selection.fedrand_select(avail, fed_cfg.fedrand_c, r_sel)
-        elif fed_cfg.algorithm == "fedpow":
-            d = fed_cfg.fedpow_d or K
-            m = fed_cfg.fedpow_m or max(K // 2, 1)
-            team = selection.fedpow_select(gl, avail, d, m, r_sel,
-                                           n=data["n"])
-        else:
-            raise ValueError(fed_cfg.algorithm)
+        with obs_annotate("selection"):
+            if fed_cfg.algorithm == "fedfits":
+                new_team = selection.fedfits_select(
+                    scores, fed_cfg.beta, avail, r_sel,
+                    floor_prob=fed_cfg.participation_floor,
+                    explore_eps=fed_cfg.explore_eps)
+                new_team = jnp.where(t == 1, avail, new_team)
+                team = jnp.where(state.h, new_team, state.team * avail)
+            elif fed_cfg.algorithm == "fedavg":
+                team = selection.fedavg_select(avail)
+            elif fed_cfg.algorithm == "fedrand":
+                team = selection.fedrand_select(avail, fed_cfg.fedrand_c,
+                                                r_sel)
+            elif fed_cfg.algorithm == "fedpow":
+                d = fed_cfg.fedpow_d or K
+                m = fed_cfg.fedpow_m or max(K // 2, 1)
+                team = selection.fedpow_select(gl, avail, d, m, r_sel,
+                                               n=data["n"])
+            else:
+                raise ValueError(fed_cfg.algorithm)
 
         # ---- fault injection: mid-round dropout ------------------------
         # a SELECTED client computes its update (so it is still billed,
@@ -288,41 +297,56 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         # crossed the wire (billed-but-lost, like mid-round dropout).
         part_pre, stale_pre = part, stale
         rejected = jnp.zeros((K,), jnp.float32)
+        g_nonfinite = g_norm = jnp.float32(0.0)
         if guard_on:
-            updates, _, rejected = aggregation.sanitize_updates(
-                updates, (part > 0).astype(jnp.float32),
-                norm_mult=fed_cfg.guard_norm_mult)
+            if state.tele is not None:
+                # guard rejections split by kind — shares the guard's own
+                # reductions (CSE), a pure readout
+                nf, nr = aggregation.rejection_kinds(
+                    updates, (part > 0).astype(jnp.float32),
+                    norm_mult=fed_cfg.guard_norm_mult)
+                g_nonfinite, g_norm = nf.sum(), nr.sum()
+            with obs_annotate("sanitize"):
+                updates, _, rejected = aggregation.sanitize_updates(
+                    updates, (part > 0).astype(jnp.float32),
+                    norm_mult=fed_cfg.guard_norm_mult)
             delivered = delivered * (1.0 - rejected)
             stale = stale * (1.0 - rejected)
             part = jnp.clip(delivered + stale, 0.0, 1.0)
-        if fed_cfg.paper_exact_agg:
-            # Algorithm 1's size-proportional FedAvg step.  The paper
-            # writes n_k/|S_t|, but data["n"] carries REAL partition
-            # sizes, so dividing raw counts by the team size would scale
-            # the update by ~mean(n_k) (hundreds x); the convex
-            # combination the algorithm means is n_k / sum_{j in S_t} n_j
-            w = data["n"].astype(jnp.float32) * delivered
-            w = w / jnp.maximum(w.sum(), 1e-12)
-            agg = jax.tree_util.tree_map(
-                lambda l: jnp.tensordot(w.astype(l.dtype), l, axes=(0, 0)),
-                updates)
-        else:
-            weights = data["n"].astype(jnp.float32) * state.trust \
-                * (delivered + stale)
-            part_mask = (part > 0).astype(jnp.float32)
-            from repro.comm.kernels import comm_codecs as dq
-            if enc is not None and dq.should_fuse(codec, fed_cfg, updates):
-                # server aggregates STRAIGHT from the int8 wire codes:
-                # dequant happens in VMEM inside the fused Eq.-11 passes
-                # (bit-identical to aggregating `dec`; ~4x less agg HBM)
-                agg = dq.fused_dequant_aggregate_tree(
-                    enc, weights, part_mask, fed_cfg, like=updates,
-                    blk=getattr(fed_cfg, "agg_blk", None))
+        with obs_annotate("aggregate"):
+            if fed_cfg.paper_exact_agg:
+                # Algorithm 1's size-proportional FedAvg step.  The paper
+                # writes n_k/|S_t|, but data["n"] carries REAL partition
+                # sizes, so dividing raw counts by the team size would
+                # scale the update by ~mean(n_k) (hundreds x); the convex
+                # combination the algorithm means is
+                # n_k / sum_{j in S_t} n_j
+                w = data["n"].astype(jnp.float32) * delivered
+                w = w / jnp.maximum(w.sum(), 1e-12)
+                agg = jax.tree_util.tree_map(
+                    lambda l: jnp.tensordot(w.astype(l.dtype), l,
+                                            axes=(0, 0)),
+                    updates)
             else:
-                agg = aggregation.aggregate(updates, weights, part_mask,
-                                            fed_cfg)
-        new_params = jax.tree_util.tree_map(
-            lambda p, u: p + u.astype(p.dtype), state.params, agg)
+                weights = data["n"].astype(jnp.float32) * state.trust \
+                    * (delivered + stale)
+                part_mask = (part > 0).astype(jnp.float32)
+                from repro.comm.kernels import comm_codecs as dq
+                if enc is not None and dq.should_fuse(codec, fed_cfg,
+                                                      updates):
+                    # server aggregates STRAIGHT from the int8 wire
+                    # codes: dequant happens in VMEM inside the fused
+                    # Eq.-11 passes (bit-identical to aggregating `dec`;
+                    # ~4x less agg HBM)
+                    agg = dq.fused_dequant_aggregate_tree(
+                        enc, weights, part_mask, fed_cfg, like=updates,
+                        blk=getattr(fed_cfg, "agg_blk", None))
+                else:
+                    agg = aggregation.aggregate(updates, weights,
+                                                part_mask, fed_cfg)
+        with obs_annotate("writeback"):
+            new_params = jax.tree_util.tree_map(
+                lambda p, u: p + u.astype(p.dtype), state.params, agg)
 
         # ---- slot & trust state ------------------------------------------
         theta_team = fitness.team_theta(th, team)
@@ -366,6 +390,31 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
         billed = jnp.where(state.h, avail.sum(), team.sum())
         if not fed_cfg.paper_exact_agg:
             billed = billed + (stale_pre > 0).sum()
+
+        # ---- telemetry readout (repro/obs/) -----------------------------
+        # pure readouts of values the round already produced; nothing
+        # downstream reads them back, so on/off runs are bit-identical
+        new_tele, obs_metrics = state.tele, {}
+        if state.tele is not None:
+            wts = data["n"].astype(jnp.float32) * state.trust
+            vals = {
+                "gate/cosine_rejected": gated.sum(),
+                "guard/nonfinite": g_nonfinite,
+                "guard/norm": g_norm,
+                "select/team_size": team.sum(),
+                "select/available": avail.sum(),
+                "agg/fresh_mass": (wts * delivered).sum(),
+                "agg/stale_mass": (wts * stale).sum(),
+                "cohort/trust_q": obs_counters.quantiles(new_trust),
+                "cohort/gate_trust_q": obs_counters.quantiles(
+                    new_gate_trust),
+                "cohort/fitness_q": obs_counters.quantiles(scores),
+                "wire/bytes_up": billed * bytes_up_pc,
+                "wire/bytes_down": billed * bytes_down_pc,
+                "fault/lost": lost.sum(),
+            }
+            new_tele = obs_counters.accumulate(state.tele, vals, "sync")
+            obs_metrics = obs_counters.metric_keys(vals)
         new_clients = state.clients._replace(
             # fitness EWMA at compute time (the population-store prior;
             # the sync selection path keeps using the fresh scores, so
@@ -384,7 +433,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             cost_client_rounds=state.cost_client_rounds + billed,
             cost_bytes_up=state.cost_bytes_up + billed * bytes_up_pc,
             cost_bytes_down=state.cost_bytes_down + billed * bytes_down_pc,
-            clients=new_clients, attacker=att_carry)
+            clients=new_clients, attacker=att_carry, tele=new_tele)
         metrics = {
             "theta": th, "score": scores, "team": team, "alpha": alpha,
             "theta_team": theta_team, "h_next": h_next,
@@ -398,6 +447,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
             "fault_lost": lost.sum(),
             "fault_eff_epochs": eff_epochs.astype(jnp.float32).mean(),
             **fairness.round_fairness(ga, avail, state.cum_selected + team),
+            **obs_metrics,
         }
         return new_state, metrics
 
@@ -406,7 +456,7 @@ def make_round(model, fed_cfg, *, data_attack=None, update_attack=None,
 
 def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
         data_attack=None, update_attack=None, malicious=None,
-        faults=None, driver="scan", chunk_rounds=8):
+        faults=None, driver="scan", chunk_rounds=8, telemetry=None):
     """Drives n_rounds of FL. data_fn(round, rng) -> client-stacked batch.
     eval_fn(params) -> dict of server-side metrics (optional, per round).
     Returns (final_state, history list of dicts).
@@ -424,6 +474,11 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
     att = update_attack if getattr(update_attack, "stateful", False) else None
     state = init_state(params, fed_cfg.n_clients, fed_cfg, r_run,
                        attacker=att)
+    if telemetry is not None:
+        telemetry.bind_engine("sync")
+        if telemetry.counters:
+            state = state._replace(
+                tele=obs_counters.init_column("sync", fed_cfg))
     round_fn = make_round(model, fed_cfg, data_attack=data_attack,
                           update_attack=update_attack, malicious=malicious,
                           faults=faults)
@@ -442,11 +497,16 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
                      < fed_cfg.avail_prob).astype(jnp.float32)
                 a = a.at[0].set(1.0)               # never an empty round
                 batch["avail"] = a if t > 1 else jnp.ones((K,), jnp.float32)
+            w0 = telemetry.now_us() if telemetry is not None else 0.0
             state, metrics = round_jit(state, batch)
             row = {k: jax.device_get(v) for k, v in metrics.items()}
             if eval_fn is not None:
                 row.update(jax.device_get(eval_fn(state.params)))
             row["round"] = t
+            if telemetry is not None:
+                # device_get above synced, so the window is a real
+                # per-round host measurement under this driver
+                telemetry.observe_rows([row], w0, telemetry.now_us() - w0)
             history.append(row)
         return state, history
     if driver != "scan":
@@ -468,4 +528,5 @@ def run(model, fed_cfg, data_fn, n_rounds, rng, *, eval_fn=None,
 
     return scan_driver.run_chunked(
         body, state, lambda t: data_fn(t, jax.random.fold_in(rng, t)),
-        n_rounds, chunk_steps=chunk_rounds, t0=1, index_key="round")
+        n_rounds, chunk_steps=chunk_rounds, t0=1, index_key="round",
+        telemetry=telemetry)

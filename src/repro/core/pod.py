@@ -312,7 +312,8 @@ def make_train_step(model_cfg, fed_cfg, train_cfg, *, robust=None,
 
 
 def run(state, train_step, batch_fn, n_rounds, *, driver="scan",
-        chunk_rounds=8, batch_sharding=None, t0=0, on_chunk=None):
+        chunk_rounds=8, batch_sharding=None, t0=0, on_chunk=None,
+        telemetry=None):
     """Multi-round PodEngine training through the shared chunked-scan
     driver (core/driver.py) — the same subsystem that drives
     ``fedfits.run``.
@@ -339,7 +340,14 @@ def run(state, train_step, batch_fn, n_rounds, *, driver="scan",
 
     Returns (final_state, history rows keyed by "step").
     ``on_chunk(state, rows)`` fires after each chunk (logging /
-    checkpoint hook); the python driver fires it per round."""
+    checkpoint hook); the python driver fires it per round.
+
+    ``telemetry`` (repro.obs.Telemetry) observes the drained rows and
+    driver-level trace spans; the pod step publishes its existing
+    metrics, so no extra carry column is attached here."""
+    if telemetry is not None:
+        telemetry.bind_engine("sync")
+
     def body(st, xs):
         _, batch = xs
         return train_step(st, batch)
@@ -352,9 +360,12 @@ def run(state, train_step, batch_fn, n_rounds, *, driver="scan",
             batch = dict(batch_fn(t))
             if put_sharding is not None:
                 batch = jax.device_put(batch, put_sharding)
+            w0 = telemetry.now_us() if telemetry is not None else 0.0
             state, metrics = step_jit(state, batch)
             row = {k: jax.device_get(v) for k, v in metrics.items()}
             row["step"] = t
+            if telemetry is not None:
+                telemetry.observe_rows([row], w0, telemetry.now_us() - w0)
             if on_chunk is not None:
                 on_chunk(state, [row])
             history.append(row)
@@ -364,4 +375,5 @@ def run(state, train_step, batch_fn, n_rounds, *, driver="scan",
 
     return scan_driver.run_chunked(
         body, state, batch_fn, n_rounds, chunk_steps=chunk_rounds, t0=t0,
-        batch_sharding=batch_sharding, index_key="step", on_chunk=on_chunk)
+        batch_sharding=batch_sharding, index_key="step", on_chunk=on_chunk,
+        telemetry=telemetry)

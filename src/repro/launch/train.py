@@ -53,15 +53,39 @@ def synthetic_lm_batches(cfg, tc, n_clients, seed):
     return jax.jit(sample)
 
 
+def make_telemetry(args, run_name="run"):
+    """--trace/--telemetry-jsonl/--profile-dir -> a Telemetry (or None
+    when no obs output was requested; the scenario path still attaches
+    its default in-memory telemetry in that case)."""
+    from repro import obs
+
+    sinks = []
+    if args.telemetry_jsonl:
+        sinks.append(obs.JsonlSink(args.telemetry_jsonl))
+    if not (args.telemetry_jsonl or args.trace or args.profile_dir):
+        return None
+    return obs.Telemetry(sinks=sinks, trace_path=args.trace,
+                         profiler_dir=args.profile_dir, run_name=run_name)
+
+
 def run_scenario_cli(args):
     """--scenario: one robustness-registry cell through the SimEngine."""
     from repro.scenarios import run_scenario
 
     rounds = min(args.steps, 50)        # SimEngine rounds, not LM steps
-    summary, hist = run_scenario(
-        args.scenario, n_clients=args.clients, n_rounds=rounds,
-        driver=args.driver, chunk_rounds=args.chunk_rounds,
-        population=args.population, async_deadline=args.async_deadline)
+    telemetry = make_telemetry(args, run_name=args.scenario)
+    ctx = telemetry.profiled() if telemetry is not None else None
+    if ctx is not None:
+        ctx.__enter__()
+    try:
+        summary, hist = run_scenario(
+            args.scenario, n_clients=args.clients, n_rounds=rounds,
+            driver=args.driver, chunk_rounds=args.chunk_rounds,
+            population=args.population, async_deadline=args.async_deadline,
+            telemetry=telemetry)
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
     for h in hist:
         print(json.dumps({
             "round": int(h["round"]),
@@ -130,6 +154,21 @@ def main():
                          "late deliveries retry through the staleness-"
                          "weighted buffer. Only meaningful with "
                          "--scenario")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="write a Chrome/Perfetto trace-event JSON for "
+                         "the run (repro/obs/trace.py): measured driver "
+                         "spans at chunk granularity plus attributed "
+                         "per-round phase spans carrying each round's "
+                         "counter values. Load in ui.perfetto.dev; "
+                         "validate with python -m repro.obs.check")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="OUT_JSONL",
+                    help="stream the obs metric rows + drift-monitor "
+                         "warnings as JSON lines (one record per round; "
+                         "kind=metrics|warning|summary)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the run in jax.profiler.trace(DIR) — the "
+                         "ground-truth XLA timeline escape hatch (view "
+                         "with TensorBoard/Perfetto)")
     ap.add_argument("--async-deadline", type=float, default=None,
                     help="per-round delivery deadline of the buffered-"
                          "async engine (the exponential client delays "
@@ -226,13 +265,24 @@ def main():
                                  for r in rows):
             ckpt.save_step(args.ckpt_dir, last + 1, st)
 
+    telemetry = make_telemetry(args, run_name=args.arch)
     with mesh:
-        state, _ = pod.run(
-            state, step_fn, lambda t: sampler(jax.random.fold_in(
-                sample_key, t)),
-            args.steps - start, driver=args.driver,
-            chunk_rounds=chunk_rounds, batch_sharding=batch_sh,
-            t0=start, on_chunk=on_chunk)
+        if telemetry is not None:
+            with telemetry.profiled():
+                state, _ = pod.run(
+                    state, step_fn, lambda t: sampler(jax.random.fold_in(
+                        sample_key, t)),
+                    args.steps - start, driver=args.driver,
+                    chunk_rounds=chunk_rounds, batch_sharding=batch_sh,
+                    t0=start, on_chunk=on_chunk, telemetry=telemetry)
+            telemetry.finish()
+        else:
+            state, _ = pod.run(
+                state, step_fn, lambda t: sampler(jax.random.fold_in(
+                    sample_key, t)),
+                args.steps - start, driver=args.driver,
+                chunk_rounds=chunk_rounds, batch_sharding=batch_sh,
+                t0=start, on_chunk=on_chunk)
     print("done")
 
 

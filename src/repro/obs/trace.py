@@ -1,0 +1,161 @@
+"""Phase-level trace emitter: Chrome/Perfetto trace-event JSON.
+
+Rounds run *inside* one jitted ``lax.scan`` chunk, so the host cannot
+clock individual phases without breaking the 1-host-sync-per-chunk
+contract.  The emitter is therefore two-tier and honest about which
+tier is which:
+
+  * **measured spans** — the ScanDriver (and the python-driver loops)
+    wall-clock what the host can actually see: per-chunk ``stage`` /
+    ``compute`` / ``drain`` spans, and per-round totals under the
+    python driver.  These are real ``time.perf_counter`` measurements.
+  * **attributed spans** — inside a chunk, each round's window is split
+    into the engine's phase sequence (selection → client_update →
+    delivery → sanitize → aggregate → writeback) by the static weight
+    tables below.  The span BOUNDARIES are attribution, not
+    measurement — ``args.attributed`` marks them — but each span's
+    ``args`` carry that round's REAL drained counter values
+    (``obs/...`` metrics), so the trace still answers "what did the
+    gate/buffer/aggregator do in round t".
+
+For ground-truth device timings use the escape hatch: pass
+``profiler_dir`` to :class:`Telemetry` (``--profile-dir`` on the
+launcher) and the whole run is wrapped in ``jax.profiler.trace`` —
+XLA-level timelines, at XLA-level volume.
+
+Inside jit, :func:`annotate` stacks ``jax.named_scope`` (names the ops
+in jaxprs/HLO, so profiler traces and the analysis linter see phase
+names) with ``jax.profiler.TraceAnnotation`` when a profiler is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+# The canonical phase sequence (name, sync weight, async weight).
+# Weights are the static attribution split of a round's window; they
+# are documentation-grade estimates (client_update dominates: it is the
+# vmapped local-epochs loop), not measurements — see module docstring.
+PHASES: Tuple[Tuple[str, float, float], ...] = (
+    ("selection", 0.05, 0.08),
+    ("client_update", 0.60, 0.52),
+    ("delivery", 0.05, 0.12),
+    ("sanitize", 0.05, 0.05),
+    ("aggregate", 0.15, 0.13),
+    ("writeback", 0.10, 0.10),
+)
+
+PHASE_NAMES: Tuple[str, ...] = tuple(p[0] for p in PHASES)
+
+
+def phase_weights(engine: str) -> Dict[str, float]:
+    col = 1 if engine == "sync" else 2
+    w = {p[0]: p[col] for p in PHASES}
+    total = sum(w.values())
+    return {k: v / total for k, v in w.items()}
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Phase annotation inside jitted round bodies: names the ops for
+    jaxpr/HLO/profiler consumers.  Pure metadata — no ops are added, so
+    telemetry-on stays bit-identical."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+class TraceRecorder:
+    """Collects trace events and writes ``{"traceEvents": [...]}``.
+
+    Events use the Chrome trace-event "X" (complete) phase with
+    microsecond timestamps; ``pid`` groups engines, ``tid`` separates
+    the driver track (0) from the round track (1).
+    """
+
+    DRIVER_TID = 0
+    ROUND_TID = 1
+
+    def __init__(self, engine: str = "sync"):
+        self.engine = engine
+        self.events: List[dict] = []
+        self._t0 = time.perf_counter()
+        self._weights = phase_weights(engine)
+        self._open: Dict[str, float] = {}
+
+    # -- measured spans (host wall clock) -----------------------------
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def begin(self, name: str) -> None:
+        self._open[name] = self.now_us()
+
+    def end(self, name: str, **args) -> None:
+        start = self._open.pop(name, None)
+        if start is None:
+            return
+        self.span(name, start, self.now_us() - start,
+                  tid=self.DRIVER_TID, **args)
+
+    def span(self, name: str, ts_us: float, dur_us: float, *,
+             tid: int = 0, **args) -> None:
+        self.events.append({
+            "name": name, "ph": "X", "pid": 0, "tid": tid,
+            "ts": ts_us, "dur": max(dur_us, 0.01),
+            "args": args,
+        })
+
+    # -- attributed per-round phase spans -----------------------------
+    def emit_rounds(self, window_start_us: float, window_dur_us: float,
+                    rows: Sequence[dict]) -> None:
+        """Split a measured window (one chunk, or one python-driver
+        round) across its rounds and each round across the engine's
+        phases.  ``rows`` are the drained history rows; each phase span
+        carries the round's real ``obs/`` counters in ``args``."""
+        if not rows:
+            return
+        per_round = window_dur_us / len(rows)
+        for j, row in enumerate(rows):
+            r0 = window_start_us + j * per_round
+            rnd = row.get("round", row.get("step", j))
+            obs = {k: _num(v) for k, v in row.items()
+                   if isinstance(k, str) and k.startswith("obs/")}
+            off = 0.0
+            for name in PHASE_NAMES:
+                dur = per_round * self._weights[name]
+                self.span(name, r0 + off, dur, tid=self.ROUND_TID,
+                          round=_num(rnd), attributed=True, **obs)
+                off += dur
+
+    def to_json(self) -> dict:
+        return {"traceEvents": list(self.events),
+                "displayTimeUnit": "ms",
+                "otherData": {"engine": self.engine,
+                              "phase_weights": self._weights}}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+        return path
+
+
+def _num(v):
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return str(v)
+    return int(f) if f == int(f) else f
+
+
+@contextlib.contextmanager
+def profiler_session(profiler_dir: Optional[str]):
+    """The ground-truth escape hatch: wrap the run in
+    ``jax.profiler.trace`` when a directory is given, else no-op."""
+    if profiler_dir:
+        with jax.profiler.trace(profiler_dir):
+            yield
+    else:
+        yield

@@ -21,6 +21,7 @@ from repro.configs.registry import ARCHS
 from repro.core import async_engine, attacks, fedfits
 from repro.data.pipeline import build_federation
 from repro.models.model import build
+from repro.obs import MemorySink, Telemetry
 from repro.scenarios import registry
 
 
@@ -69,7 +70,8 @@ def make_attack_fns(sc, fed_cfg, n_classes):
 def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
                  kind="tabular", n=1600, n_classes=10, sep=1.0,
                  dirichlet_alpha=1.0, arch=None, driver="scan",
-                 chunk_rounds=4, population=None, async_deadline=None):
+                 chunk_rounds=4, population=None, async_deadline=None,
+                 telemetry=None):
     """Run one scenario cell; returns (summary dict, per-round history).
 
     ``population`` / ``async_deadline`` (the launch CLI's --population /
@@ -78,6 +80,13 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
     scenario's own async settings.  Async cells (``sc.async_mode``)
     sample a cohort of ``n_clients`` per round from the M-row
     ClientStore; ``n_clients`` is the COHORT size, not the population.
+
+    ``telemetry``: a ``repro.obs.Telemetry``; by default every cell gets
+    one with an in-memory sink, so the summary row always carries the
+    drift-monitor outcome (``obs_warnings``/``obs_rows``).  Pass your
+    own to route the cell's metric stream to JSONL/stdout sinks or a
+    ``--trace`` Perfetto file; pass ``telemetry=False`` to opt out
+    entirely (the engines then run the telemetry-free program).
 
     ``sep`` defaults below the pipeline's easy-mode class separation: on
     the trivially-separable default every aggregator reaches ~1.0 within
@@ -131,6 +140,10 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
         trig_acc = (logits.argmax(-1) == sc.backdoor_target).mean()
         return {"test_acc": m["acc"], "trigger_acc": trig_acc}
 
+    if telemetry is None:
+        telemetry = Telemetry(sinks=[MemorySink()], run_name=sc.name)
+    elif telemetry is False:
+        telemetry = None
     t0 = time.time()
     if sc.async_mode:
         state, hist = async_engine.run_async(
@@ -141,16 +154,22 @@ def run_scenario(scenario, *, n_clients=10, n_rounds=10, seed=0,
             data_attack=data_attack, update_attack=update_attack,
             malicious=malicious, faults=sc.faults,
             straggler_rows=sc.straggler_rows, driver=driver,
-            chunk_rounds=chunk_rounds)
+            chunk_rounds=chunk_rounds, telemetry=telemetry)
     else:
         state, hist = fedfits.run(
             model, fed_cfg, federation.data_fn, n_rounds,
             jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
             data_attack=data_attack, update_attack=update_attack,
             malicious=malicious, faults=sc.faults, driver=driver,
-            chunk_rounds=chunk_rounds)
+            chunk_rounds=chunk_rounds, telemetry=telemetry)
     wall = time.time() - t0
-    return summarize(sc, state, hist, n_mal, wall), hist
+    summary = summarize(sc, state, hist, n_mal, wall)
+    if telemetry is not None:
+        obs = telemetry.finish()
+        summary["obs_rows"] = obs["rows"]
+        summary["obs_warnings"] = obs["n_warnings"]
+        summary["obs_warning_counts"] = obs["warnings"]
+    return summary, hist
 
 
 def summarize(sc, state, hist, n_mal, wall_s):

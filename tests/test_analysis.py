@@ -292,6 +292,76 @@ def test_pallas_budget_reports_lane_minor_blocks():
 
 
 # --------------------------------------------------------------------- #
+# fusion count (hlo)                                                    #
+# --------------------------------------------------------------------- #
+
+# fused aggregation: one cohort-axis sort (1x payload) + the 1/C-sized
+# aggregated output — ~1.1 passes over a 1024B payload
+_HLO_FUSED = """\
+HloModule fused_agg
+%fused_computation { ... }
+ENTRY %main.9 (Arg_0.1: f32[8,32]) -> f32[32] {
+  %Arg_0.1 = f32[8,32]{1,0} parameter(0)
+  %sort.1 = f32[8,32]{1,0} sort(f32[8,32]{1,0} %Arg_0.1), dimensions={0}
+  ROOT %fusion.1 = f32[32]{0} fusion(f32[8,32]{1,0} %sort.1), kind=kLoop, calls=%fused_computation
+}
+"""
+
+# mutation twin: XLA dropped the fusion — the payload is re-sorted,
+# copied, and flattened through fresh cohort-sized buffers (>4 passes)
+_HLO_SPILLED = """\
+HloModule spilled_agg
+ENTRY %main.9 (Arg_0.1: f32[8,32]) -> f32[32] {
+  %Arg_0.1 = f32[8,32]{1,0} parameter(0)
+  %sort.1 = f32[8,32]{1,0} sort(f32[8,32]{1,0} %Arg_0.1), dimensions={0}
+  %copy.1 = f32[8,32]{1,0} copy(f32[8,32]{1,0} %sort.1)
+  %sort.2 = f32[8,32]{1,0} sort(f32[8,32]{1,0} %copy.1), dimensions={0}
+  %reshape.1 = f32[256]{0} reshape(f32[8,32]{1,0} %sort.2)
+  %tuple.5 = (f32[256]{0}) tuple(f32[256]{0} %reshape.1)
+  %gte.1 = f32[256]{0} get-tuple-element((f32[256]{0}) %tuple.5), index=0
+  ROOT %reduce.1 = f32[32]{0} reduce(f32[256]{0} %gte.1, f32[] %c), dimensions={0}
+}
+"""
+
+
+def _fusion_ctx(text, cap):
+    ctx = _ctx(lambda x: x, (jnp.ones(1),), hbm_pass_cap=cap,
+               hbm_payload_bytes=8 * 32 * 4, hbm_bytes_threshold=128)
+    ctx.hlo_text = text
+    return ctx
+
+
+def test_iter_materializations_entry_only_and_exempt():
+    mats = list(hlo_mod.iter_materializations(_HLO_SPILLED, min_bytes=128))
+    ops = [m.op for m in mats]
+    # parameter/tuple/get-tuple-element are exempt; everything else counts
+    assert ops == ["sort", "copy", "sort", "reshape", "reduce"]
+    assert mats[0].bytes == 8 * 32 * 4
+    # sub-computation bodies outside ENTRY are invisible
+    assert not list(hlo_mod.iter_materializations(
+        "%fused { %a = f32[999]{0} add(...) }\n"))
+
+
+def test_fusion_count_silent_on_fused_aggregation():
+    ctx = _fusion_ctx(_HLO_FUSED, cap=2.0)
+    assert not _findings(ctx, "fusion_count")
+    assert any("hbm passes" in n for n in ctx.result.notes)
+
+
+def test_fusion_count_fires_on_spilled_chain():
+    ctx = _fusion_ctx(_HLO_SPILLED, cap=2.0)
+    f = _findings(ctx, "fusion_count")
+    assert f and "spilling intermediates" in f[0].message
+    assert "sort" in f[0].message
+
+
+def test_fusion_count_noop_without_cap():
+    ctx = _ctx(lambda x: x, (jnp.ones(1),))
+    ctx.hlo_text = _HLO_SPILLED
+    assert not _findings(ctx, "fusion_count")
+
+
+# --------------------------------------------------------------------- #
 # collective lint (hlo)                                                 #
 # --------------------------------------------------------------------- #
 
