@@ -1,0 +1,197 @@
+"""Serving-engine benchmarks (repro/serve): the tokens/s table for the
+continuous-batching tentpole.
+
+``serve/continuous_vs_fixed`` runs the SAME compiled admit/decode
+programs under both schedulers on a mixed-length workload (generation
+budgets in [16, 256]: mostly short turns, one long generation per
+``max_slots`` arrivals) at equal max batch — scheduling is the only
+variable, and the acceptance bar is >= 2x tokens/s for continuous.
+
+``serve/decode_{dense,paged,paged_int8}`` times one decode step of each
+cache regime at the same batch width and records the KV bytes it
+streams: dense reads the full ``max_len`` cache for every slot; paged
+reads only live pages (measured from the engine's ``serve/pages_in_use``
+gauge); int8 pages cut the per-row payload ~3.8x (1-byte codes + f32
+per-row scale vs 4-byte values).
+
+Rows merge into BENCH_kernels.json via common.merge_rows (section key
+``serve/``); the scheduler comparison uses the XLA reference attention
+so the CPU row times the scheduler, not the interpreter.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs.registry import get_config
+from repro.launch.serve import draw_requests, make_decode_step
+from repro.models.model import build
+from repro.serve import ServeConfig, ServeEngine, kv_bytes_read
+
+
+def _time_threaded(step, state, reps=5, warmup=2):
+    """Best-of-reps for a state-threading step fn (donation-safe: the
+    carry is rebound every call instead of reusing donated buffers)."""
+    for _ in range(warmup):
+        state = step(state)
+        jax.block_until_ready(state)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        state = step(state)
+        jax.block_until_ready(state)
+        best = min(best, time.perf_counter() - t0)
+    return best, state
+
+
+def _warm_engine(cfg, scfg, params, *, steps=24, seed=0):
+    """An engine mid-flight: every slot admitted and decoded ``steps``
+    in, so the timed step sees realistic page occupancy."""
+    engine = ServeEngine(cfg, scfg, params, seed=seed)
+    cache, st = engine.fresh_state()
+    prompt = jnp.zeros((scfg.prompt_pad,), jnp.int32)
+    for rid in range(scfg.max_slots):
+        # half-budget requests: paged reads only the live pages while
+        # the dense baseline always streams all max_len rows
+        cache, st, out = engine._admit(
+            params, cache, st, prompt, jnp.int32(scfg.prompt_pad),
+            jnp.int32(scfg.max_len // 2), jnp.int32(rid))
+    for _ in range(steps):
+        cache, st, out = engine._decode(params, cache, st)
+    return engine, cache, st, out
+
+
+def _mixed_workload(n, max_slots, vocab, seed=3):
+    """Mixed-length serving workload, generation budgets in [16, 256]:
+    mostly short turns (log-uniform 16-48) with one long generation
+    (log-uniform 192-256) per ``max_slots`` arrivals — the regime fixed
+    batching handles worst, since every batch waits on its long
+    member.  Deterministic by seed."""
+    import math
+
+    import numpy as np
+
+    from repro.serve import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        lo, hi = ((192, 256) if i % max_slots == max_slots - 1
+                  else (16, 48))
+        gen = int(round(math.exp(rng.uniform(math.log(lo),
+                                             math.log(hi)))))
+        prompt = tuple(rng.randint(0, vocab, 8).tolist())
+        reqs.append(Request(i, prompt, gen))
+    return reqs
+
+
+def bench_scheduler(cfg, params, *, requests, max_slots, budget):
+    reqs = _mixed_workload(requests, max_slots, cfg.vocab_size, seed=3)
+    max_len = 8 + 256
+    scfg = ServeConfig(max_slots=max_slots, page_size=16, max_len=max_len,
+                       prompt_pad=8, attn="ref")
+    rows = []
+    stats = {}
+    for mode in ("continuous", "fixed"):
+        engine = ServeEngine(cfg, scfg, params, seed=0)
+        # untimed compile pass on a 2-request prefix
+        engine.run(reqs[:2], continuous=mode == "continuous")
+        _, s = engine.run(reqs, continuous=mode == "continuous")
+        stats[mode] = s
+    speed = (stats["continuous"]["tokens_per_s"]
+             / max(stats["fixed"]["tokens_per_s"], 1e-9))
+    trail = stats["continuous"]["occupancy_trail"]
+    rows.append({
+        "name": "serve/continuous_vs_fixed",
+        "wall_s": stats["continuous"]["wall_s"],
+        "wall_s_fixed": stats["fixed"]["wall_s"],
+        "tokens_per_s": stats["continuous"]["tokens_per_s"],
+        "tokens_per_s_fixed": stats["fixed"]["tokens_per_s"],
+        "speedup_vs_fixed": speed,
+        "steps": stats["continuous"]["steps"],
+        "steps_fixed": stats["fixed"]["steps"],
+        "tokens": stats["continuous"]["tokens"],
+        "mean_occupancy": sum(trail) / max(len(trail), 1),
+        "requests": requests, "max_slots": max_slots,
+        "gen_min": 16, "gen_max": 256, "budget": budget,
+    })
+    return rows
+
+
+def bench_decode_step(cfg, params, *, max_slots):
+    scfg = dict(max_slots=max_slots, page_size=16, max_len=128,
+                prompt_pad=8, attn="ref")
+    rows = []
+    kv_fp32 = kv_int8 = None
+    for name, int8 in (("serve/decode_paged", False),
+                       ("serve/decode_paged_int8", True)):
+        sc = ServeConfig(kv_int8=int8, **scfg)
+        engine, cache, st, out = _warm_engine(cfg, sc, params)
+        pages = float(out["vals"]["serve/pages_in_use"])
+        kv = kv_bytes_read(cfg, sc, pages)
+        if int8:
+            kv_int8 = kv
+        else:
+            kv_fp32 = kv
+        wall, _ = _time_threaded(
+            lambda s: engine._decode(params, s[0], s[1])[:2], (cache, st))
+        rows.append({"name": name, "wall_s": wall,
+                     "kv_bytes_per_step": kv, "pages_in_use": pages,
+                     "max_slots": max_slots, "page_size": 16})
+    rows[1]["kv_bytes_reduction"] = kv_fp32 / kv_int8
+
+    # dense full-cache baseline at the same batch width: every slot
+    # streams all max_len KV rows regardless of its actual length
+    model = build(cfg)
+    max_len = scfg["max_len"]
+    cache = model.init_cache(max_slots, max_len, dtype=jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(0), (max_slots, 8),
+                                 0, cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": prompts}, cache)
+    step = jax.jit(make_decode_step(model, temperature=0.0))
+    tok = jnp.zeros((max_slots, 1), jnp.int32)
+
+    def dense_step(s):
+        t, c, k = step(params, s[0], s[1], jnp.int32(32), s[2])
+        return t, c, k
+
+    wall, _ = _time_threaded(dense_step,
+                             (tok, cache, jax.random.PRNGKey(1)))
+    from repro.models import transformer
+    cycle, n_units = transformer.layer_cycle(cfg)
+    dense_kv = (2.0 * max_slots * max_len * cfg.n_kv_heads
+                * cfg.resolved_head_dim * 4 * n_units * len(cycle))
+    rows.append({"name": "serve/decode_dense", "wall_s": wall,
+                 "kv_bytes_per_step": dense_kv,
+                 "max_slots": max_slots, "max_len": max_len})
+    return rows
+
+
+def main(budget="small"):
+    cfg = get_config("tiny-lm").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = 24 if budget == "small" else 48
+    rows = bench_scheduler(cfg, params, requests=requests, max_slots=6,
+                           budget=budget)
+    rows += bench_decode_step(cfg, params, max_slots=6)
+    for r in rows:
+        if "speedup_vs_fixed" in r:
+            extra = (f"speedup_vs_fixed={r['speedup_vs_fixed']:.2f}x "
+                     f"steps={r['steps']}/{r['steps_fixed']} "
+                     f"occ={r['mean_occupancy']:.2f}")
+        elif "kv_bytes_reduction" in r:
+            extra = (f"kv_bytes={r['kv_bytes_per_step']:.0f} "
+                     f"reduction={r['kv_bytes_reduction']:.2f}x")
+        else:
+            extra = f"kv_bytes={r['kv_bytes_per_step']:.0f}"
+        common.csv_row(r["name"], r["wall_s"], extra)
+    merged = common.merge_rows(rows)
+    print(f"# wrote {common.bench_json_path()} ({len(rows)} serve rows, "
+          f"{len(merged)} total)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

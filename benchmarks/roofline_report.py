@@ -1,11 +1,16 @@
-"""Render the roofline table from dry-run jsonl output.
+"""Render the roofline table from dry-run jsonl output, optionally with
+measured transport bytes from a telemetry JSONL stream next to the
+modeled collective terms.
 
-  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.jsonl
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.jsonl \
+      [--telemetry obs.jsonl]
 """
 from __future__ import annotations
 
+import argparse
 import json
-import sys
+
+from repro.launch.roofline import measured_wire_bytes
 
 
 def load(path):
@@ -21,19 +26,47 @@ def fmt_row(r):
             f"| {r['useful_ratio']:.2f} |")
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
-    rows = load(path)
+def _mb(x):
+    return f"{x / 1e6:.3f} MB"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.roofline_report")
+    ap.add_argument("path", nargs="?", default="results/dryrun.jsonl")
+    ap.add_argument("--telemetry", default=None,
+                    help="telemetry JSONL: print MEASURED wire bytes "
+                         "(obs wire/* gauges) next to the modeled terms")
+    args = ap.parse_args(argv)
+    rows = load(args.path)
     print("| arch | shape | mesh | compute s | memory s | collective s "
           "| bound | MODEL/HLO |")
     print("|---|---|---|---|---|---|---|---|")
     seen = set()
+    coll_bytes = []
     for r in rows:
         key = (r["arch"], r["shape"], r["mesh"])
         if key in seen:
             continue
         seen.add(key)
         print(fmt_row(r))
+        if "collective_bytes" in r:
+            coll_bytes.append(float(r["collective_bytes"]))
+    if args.telemetry:
+        w = measured_wire_bytes(args.telemetry)
+        print()
+        print("## measured transport (telemetry wire/* gauges)")
+        if w["rounds"] == 0:
+            print("no wire gauges in the stream (telemetry counters off?)")
+        else:
+            print(f"rounds: {w['rounds']}")
+            print(f"uplink:   {_mb(w['bytes_up'])} total, "
+                  f"{_mb(w['bytes_up_per_round'])}/round")
+            print(f"downlink: {_mb(w['bytes_down'])} total, "
+                  f"{_mb(w['bytes_down_per_round'])}/round")
+            if coll_bytes:
+                mean_coll = sum(coll_bytes) / len(coll_bytes)
+                print(f"modeled collective bytes (mean over table rows): "
+                      f"{_mb(mean_coll)}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ BENCHES = [
     # same-name rows, preserve the rest) instead of rewriting wholesale
     ("kernels", "benchmarks.bench_kernels"),
     ("scenarios", "benchmarks.bench_scenarios"),
+    ("serve", "benchmarks.bench_serve"),
 ]
 
 

@@ -1,0 +1,75 @@
+"""Continuous-batching serving walkthrough (ROADMAP item 3): the paged
+KV serving engine (repro/serve) against the fixed-batch scheduler on a
+mixed-length workload.
+
+A fleet of ``max_slots`` decode slots shares one page pool; requests
+with log-uniform generation budgets are admitted the moment a slot and
+pages free up (continuous) or only when the whole fleet drains (fixed —
+the classic batch-until-the-slowest-finishes loop).  Both run the SAME
+compiled admit/decode programs, so the tokens/s gap is pure scheduling:
+short requests stop hiding behind long ones.
+
+The slot-occupancy trail makes the difference visible: continuous stays
+near max_slots the whole run, fixed saws down to 1 while each batch
+waits for its longest member.  The int8 leg re-runs continuous with
+quantized page pools and prints the per-step KV bytes each decode
+streams (codes + per-row scales vs f32 values).
+
+  PYTHONPATH=src python examples/continuous_serving.py
+"""
+import jax
+
+from repro.configs.registry import get_config
+from repro.launch.serve import draw_requests
+from repro.models.model import build
+from repro.serve import ServeConfig, ServeEngine, kv_bytes_read
+
+REQUESTS, SLOTS, PROMPT = 14, 4, 8
+GEN_MIN, GEN_MAX = 8, 64
+
+cfg = get_config("tiny-lm").reduced()
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+reqs = draw_requests(REQUESTS, PROMPT, GEN_MIN, GEN_MAX,
+                     cfg.vocab_size, seed=7)
+print(f"{REQUESTS} requests, generation budgets "
+      f"{sorted(r.max_new for r in reqs)}\n")
+
+
+def trail_ascii(trail, slots, width=72):
+    """One char per decode step (downsampled): occupancy 0..slots."""
+    if len(trail) > width:
+        hop = len(trail) / width
+        trail = [trail[int(i * hop)] for i in range(width)]
+    glyphs = " .:-=+*#"
+    scale = (len(glyphs) - 1) / max(slots, 1)
+    return "".join(glyphs[int(round(v * scale))] for v in trail)
+
+
+results = {}
+for mode, kv_int8 in [("fixed", False), ("continuous", False),
+                      ("continuous+int8kv", True)]:
+    scfg = ServeConfig(max_slots=SLOTS, page_size=8,
+                       max_len=PROMPT + GEN_MAX, prompt_pad=PROMPT,
+                       kv_int8=kv_int8, attn="ref")
+    engine = ServeEngine(cfg, scfg, params, seed=0)
+    engine.run(reqs[:2])        # untimed compile pass
+    toks, stats = engine.run(reqs,
+                             continuous=mode.startswith("continuous"))
+    trail = stats["occupancy_trail"]
+    occ = sum(trail) / max(len(trail), 1)
+    kv = kv_bytes_read(cfg, scfg, occ * scfg.pages_per_slot)
+    results[mode] = (toks, stats)
+    print(f"{mode}")
+    print(f"  steps={stats['steps']} tokens={stats['tokens']} "
+          f"tokens/s={stats['tokens_per_s']:.1f} "
+          f"mean occupancy={occ:.2f}/{SLOTS} "
+          f"KV bytes/step~{kv / 1e3:.0f}KB")
+    print(f"  occupancy trail |{trail_ascii(trail, SLOTS)}|\n")
+
+assert results["fixed"][0] == results["continuous"][0], \
+    "argmax decoding: scheduling must not change any request's tokens"
+speed = (results["continuous"][1]["tokens_per_s"]
+         / results["fixed"][1]["tokens_per_s"])
+print(f"continuous vs fixed: {speed:.2f}x tokens/s, identical tokens "
+      "per request (scheduling is the only variable)")

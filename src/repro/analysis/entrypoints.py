@@ -401,5 +401,50 @@ def _build_decode_step():
                   collective_allowlist={}, check_rng_advance=True)
 
 
+@register_entry("serve.paged_decode_step",
+                doc="continuous-batching paged decode step "
+                    "(serve/engine.py: flash-decode kernel, donated "
+                    "pools + slot carry)")
+def _build_paged_decode_step():
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.models.model import build
+    from repro.serve import Request, ServeConfig, ServeEngine
+
+    cfg = get_config("tiny-lm").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_slots=4, page_size=8, max_len=32,
+                       prompt_pad=8, temperature=1.0, attn="pallas")
+    engine = ServeEngine(cfg, scfg, params, seed=1)
+    # warm two slots through the real admit path so the audited step
+    # sees live page tables
+    cache, st = engine.fresh_state()
+    rng = np.random.RandomState(0)
+    for rid in range(2):
+        prompt = jax.numpy.zeros((scfg.prompt_pad,), jax.numpy.int32) \
+            .at[:4].set(jax.numpy.asarray(
+                rng.randint(0, cfg.vocab_size, 4), jax.numpy.int32))
+        cache, st, _ = engine._admit(
+            params, cache, st, prompt, jax.numpy.int32(4),
+            jax.numpy.int32(8), jax.numpy.int32(rid))
+    decode = engine._make_decode()
+    off = len(jax.tree_util.tree_leaves(params))
+    pool_alias = tuple(
+        (off + i, jax.tree_util.keystr(path))
+        for i, (path, _l) in enumerate(
+            jax.tree_util.tree_flatten_with_path(cache)[0])
+        if any(f"'{k}'" in jax.tree_util.keystr(path)
+               for k in ("kp", "vp")))
+    return Target(decode, (params, cache, st),
+                  donate_argnums=(1, 2),
+                  copy_mode="engine",
+                  copy_threshold=max(_leaf_sizes(params)),
+                  collective_allowlist={}, check_rng_advance=True,
+                  donate_must_alias=pool_alias)
+
+
 def get_entry(name: str) -> EntryPoint:
     return ENTRYPOINTS[name]

@@ -473,8 +473,12 @@ def run_async(model, fed_cfg, pop_data, n_rounds, rng, *, eval_fn=None,
             row["round"] = t
             if telemetry is not None:
                 # device_get above synced, so the window is a real
-                # per-round host measurement under this driver
-                telemetry.observe_rows([row], w0, telemetry.now_us() - w0)
+                # per-round host measurement under this driver —
+                # measured=True emits it as a real (non-attributed)
+                # round span alongside the attributed phase split
+                telemetry.observe_rows([row], w0,
+                                       telemetry.now_us() - w0,
+                                       measured=True)
             history.append(row)
         return state, history
     if driver != "scan":

@@ -46,6 +46,34 @@ def roofline(cost: dict, coll_bytes: Dict[str, int]) -> dict:
     }
 
 
+def measured_wire_bytes(rows) -> dict:
+    """Aggregate the MEASURED ``wire/bytes_up``/``wire/bytes_down``
+    telemetry gauges so they can sit next to the modeled roofline terms.
+
+    ``rows`` is either a list of drained metric rows (dicts with
+    ``obs/wire/...`` keys) or a path to a telemetry JSONL stream
+    (``kind == "metrics"`` records are used).  Returns totals and
+    per-round means; ``rounds`` is the number of rows that carried the
+    gauges (0 when telemetry counters were off)."""
+    if isinstance(rows, str):
+        import json
+        with open(rows) as f:
+            rows = [r for r in (json.loads(l) for l in f if l.strip())
+                    if r.get("kind") == "metrics"]
+    up = [float(r["obs/wire/bytes_up"]) for r in rows
+          if "obs/wire/bytes_up" in r]
+    down = [float(r["obs/wire/bytes_down"]) for r in rows
+            if "obs/wire/bytes_down" in r]
+    n = max(len(up), len(down))
+    return {
+        "rounds": n,
+        "bytes_up": sum(up),
+        "bytes_down": sum(down),
+        "bytes_up_per_round": sum(up) / n if n else 0.0,
+        "bytes_down_per_round": sum(down) / n if n else 0.0,
+    }
+
+
 def count_params(params_struct) -> int:
     import jax
 

@@ -1,21 +1,33 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens
-autoregressively with the KV/SSM caches (the decode_32k / long_500k path
-at laptop scale).
+"""Serving driver: continuous batching over the paged KV cache
+(repro/serve/), with the fixed-batch dense-cache loop kept as baselines.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+      --requests 16 --max-slots 4 --page-size 8 --prompt-len 8 \
+      --gen-min 16 --gen-max 64 [--engine continuous|fixed|dense] \
+      [--kv-int8] [--telemetry-jsonl obs.jsonl] [--trace trace.json]
+
+Engines:
+  continuous  slot scheduler + paged KV + flash-decode (the default)
+  fixed       same compiled programs, batch-until-drained admission —
+              the scheduling baseline for the BENCH serve/* rows
+  dense       the original fixed-batch full-cache loop (make_decode_step)
+
+Per-request generation lengths are drawn log-uniformly in
+[--gen-min, --gen-max] (mixed-length workload: the regime where
+continuous batching wins).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models.model import build
 
 
@@ -42,55 +54,114 @@ def make_decode_step(model, *, temperature=1.0):
     return step
 
 
+def draw_requests(n, prompt_len, gen_min, gen_max, vocab, seed=0):
+    """Mixed-length synthetic workload: log-uniform generation budgets."""
+    from repro.serve import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        gen = int(round(math.exp(rng.uniform(math.log(gen_min),
+                                             math.log(gen_max)))))
+        prompt = tuple(rng.randint(0, vocab, prompt_len).tolist())
+        reqs.append(Request(i, prompt, max(gen, 1)))
+    return reqs
+
+
+def run_dense(model, cfg, args, key):
+    """The original fixed-batch full-cache loop (every request padded to
+    the longest generation)."""
+    params = model.init(key)
+    B, P, G = args.max_slots, args.prompt_len, args.gen_max
+    prompts = jax.random.randint(key, (args.requests, P), 0,
+                                 cfg.vocab_size)
+    decode_step = jax.jit(make_decode_step(model,
+                                           temperature=args.temperature))
+    prefill = jax.jit(model.prefill)
+    total = 0
+    t0 = time.time()
+    for lo in range(0, args.requests, B):
+        batch = prompts[lo:lo + B]
+        cache = model.init_cache(batch.shape[0], P + G,
+                                 dtype=jnp.float32)
+        logits, cache = prefill(params, {"tokens": batch}, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        for i in range(G - 1):
+            tok, cache, key = decode_step(params, tok, cache,
+                                          jnp.int32(P + i), key)
+        tok.block_until_ready()
+        total += batch.shape[0] * G
+    wall = time.time() - t0
+    return {"engine": "dense", "tokens": total, "wall_s": round(wall, 3),
+            "tokens_per_s": round(total / max(wall, 1e-9), 1)}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-lm")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--ring", action="store_true",
-                    help="sliding-window ring cache (long-context mode)")
-    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "fixed", "dense"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-request KV cap; 0 -> prompt-len + gen-max")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-min", type=int, default=16)
+    ap.add_argument("--gen-max", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--attn", default="pallas", choices=["ref", "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="OUT_JSONL")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.ring and not cfg.sliding_window:
-        cfg = cfg.replace(sliding_window=max(32, args.prompt_len // 2))
     model = build(cfg)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.engine == "dense":
+        print(json.dumps({"arch": cfg.name, **run_dense(model, cfg, args,
+                                                        key)}))
+        return
+
+    from repro import obs
+    from repro.serve import ServeConfig, ServeEngine
+
+    telemetry = None
+    if args.trace or args.telemetry_jsonl:
+        sinks = []
+        if args.telemetry_jsonl:
+            sinks.append(obs.JsonlSink(args.telemetry_jsonl))
+        telemetry = obs.Telemetry(sinks=sinks, trace_path=args.trace,
+                                  run_name="serve")
+
+    max_len = args.max_len or (args.prompt_len + args.gen_max)
+    scfg = ServeConfig(
+        max_slots=args.max_slots, page_size=args.page_size,
+        max_len=max_len, prompt_pad=max(args.prompt_len, 1),
+        temperature=args.temperature, kv_int8=args.kv_int8,
+        attn=args.attn)
     params = model.init(key)
-
-    B, P, G = args.batch, args.prompt_len, args.gen
-    max_len = P + G
-    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
-    cache = model.init_cache(B, max_len, ring=args.ring, dtype=jnp.float32)
-
-    prefill = jax.jit(model.prefill)
-    decode_step = jax.jit(make_decode_step(model,
-                                           temperature=args.temperature))
-
-    t0 = time.time()
-    logits, cache = prefill(params, {"tokens": prompts}, cache)
-    prefill_s = time.time() - t0
-
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for i in range(G - 1):
-        tok, cache, key = decode_step(params, tok, cache,
-                                      jnp.int32(P + i), key)
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    decode_s = time.time() - t0
+    engine = ServeEngine(cfg, scfg, params, seed=args.seed)
+    reqs = draw_requests(args.requests, args.prompt_len, args.gen_min,
+                         args.gen_max, cfg.vocab_size, seed=args.seed)
+    results, stats = engine.run(reqs, telemetry=telemetry,
+                                continuous=args.engine == "continuous")
+    if telemetry is not None:
+        telemetry.finish()
+    trail = stats.pop("occupancy_trail")
     print(json.dumps({
-        "arch": cfg.name, "batch": B, "prompt_len": P, "generated": G,
-        "prefill_s": round(prefill_s, 3),
-        "decode_s": round(decode_s, 3),
-        "tok_per_s": round(B * (G - 1) / max(decode_s, 1e-9), 1),
-        "sample_tokens": gen[0, :16].tolist(),
+        "arch": cfg.name, **stats,
+        "requests": len(reqs),
+        "kv_int8": args.kv_int8,
+        "tokens_per_s": round(stats["tokens_per_s"], 1),
+        "wall_s": round(stats["wall_s"], 3),
+        "mean_occupancy": round(sum(trail) / max(len(trail), 1), 2),
+        "sample_tokens": results[0][:16],
     }))
 
 

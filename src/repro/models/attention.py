@@ -74,6 +74,8 @@ def attention_fwd(params, x, cfg, positions, *, window=0, cache=None,
       None                     -> train/prefill, no cache returned
       {"k","v","length"}       -> full cache decode/prefill-fill
       {"k","v","pos"} (ring)   -> sliding-window ring cache decode
+      {"kp","vp","table",...}  -> paged pool cache (serving; see
+                                  init_paged_kv_cache)
       {"ck","cv"}              -> frozen cross-attention KV
     """
     dtype = x.dtype
@@ -118,6 +120,9 @@ def attention_fwd(params, x, cfg, positions, *, window=0, cache=None,
             out = out.reshape(B, S, hq * dh)
         out = out.astype(dtype).reshape(B, S, hq * dh) @ params["wo"].astype(dtype)
         return out, None
+
+    if "table" in cache:                           # ---- paged pool cache ----
+        return _paged_fwd(params, cache, q, k_new, v_new, cfg, window)
 
     if "pos" in cache and S > 1:                   # ---- ring-cache prefill ----
         W = cache["k"].shape[1]
@@ -167,6 +172,111 @@ def attention_fwd(params, x, cfg, positions, *, window=0, cache=None,
     return out, {"k": k, "v": v, "length": length + S}
 
 
+def _paged_quant(x):
+    """int8 KV append quantization: x (..., Hkv, dh) -> (codes int8 of
+    x.shape, scales f32 of x.shape[:-1]).  One absmax scale per cache
+    row per head (comm/codecs.py blockwise machinery with qblk = dh), so
+    appends never touch other rows' scales and the fused kernel dequant
+    is the exact quant_decode multiply."""
+    from repro.comm import codecs
+    flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    q, s = codecs.quant_encode(flat, x.shape[-1], 127.0)
+    return q.reshape(x.shape), s.reshape(x.shape[:-1])
+
+
+def _paged_fwd(params, cache, q, k_new, v_new, cfg, window):
+    """Paged-pool branch of attention_fwd (serving; sliding windows are
+    not supported here — the serving configs cap sequence length at the
+    page budget instead).
+
+    Cache contract (see init_paged_kv_cache):
+      kp, vp    (N, page, Hkv, dh)  shared page pools (f32 or int8 codes)
+      ks, vs    (N, page, Hkv) f32  per-(row, head) scales (int8 only)
+      table     (A, maxp) int32     per-slot page table (unallocated = 0)
+      length    (A,) int32          valid tokens already in the slot
+      active    (A,) f32            1 = slot holds a live request
+      new_valid (A,) int32          prefill only: valid rows of x to
+                                    scatter (pad rows are dropped)
+
+    Prefill (S > 1) scatters rows [0, new_valid) into the slot's pages;
+    decode (S == 1) appends one row at position ``length`` per active
+    slot and attends over the pages via the flash-decode kernel
+    (cfg.attn_impl == 'pallas') or the dense gather reference.  The
+    returned cache echoes the context leaves unchanged — the serving
+    engine owns length/active advancement and eviction.
+    """
+    from repro.kernels.paged_decode import paged_flash_decode
+    from repro.kernels.paged_decode_ref import paged_decode_ref
+
+    dtype = k_new.dtype
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    B, S = q.shape[0], q.shape[1]
+    kp, vp, table = cache["kp"], cache["vp"], cache["table"]
+    n_pages, page = kp.shape[0], kp.shape[1]
+    maxp = table.shape[1]
+    int8 = "ks" in cache
+    length, active = cache["length"], cache["active"]
+    new_cache = dict(cache)
+
+    if S > 1:
+        # ---- prefill: causal attention over the (padded) prompt, then
+        # scatter the valid rows into the slot's pages.  Pad rows are
+        # dropped (dest = n_pages); rows beyond the prompt are garbage in
+        # the output and the engine only reads position new_valid-1.
+        qg = q.reshape(B, S, hkv, g, dh)
+        mask = causal_mask(S, window=window)[None, None, None]
+        out = _sdpa(qg, k_new, v_new, mask)
+        out = out.reshape(B, S, hq * dh)
+        pos = jnp.arange(S)
+        valid = pos[None, :] < cache["new_valid"][:, None]       # (B, S)
+        prow = jnp.clip(pos // page, 0, maxp - 1)
+        pg = jnp.take_along_axis(table, jnp.broadcast_to(prow[None],
+                                                         (B, S)), axis=1)
+        dest = jnp.where(valid, pg, n_pages)       # n_pages = drop
+        row = jnp.broadcast_to(pos % page, (B, S))
+        if int8:
+            kq, ks = _paged_quant(k_new)
+            vq, vs = _paged_quant(v_new)
+            new_cache["ks"] = cache["ks"].at[dest, row].set(ks, mode="drop")
+            new_cache["vs"] = cache["vs"].at[dest, row].set(vs, mode="drop")
+            k_cast, v_cast = kq, vq
+        else:
+            k_cast = k_new.astype(kp.dtype)
+            v_cast = v_new.astype(vp.dtype)
+        new_cache["kp"] = kp.at[dest, row].set(k_cast, mode="drop")
+        new_cache["vp"] = vp.at[dest, row].set(v_cast, mode="drop")
+        out = out.astype(dtype) @ params["wo"].astype(dtype)
+        return out, new_cache
+
+    # ---- decode: append one row at position ``length`` per active slot
+    prow = jnp.clip(length // page, 0, maxp - 1)
+    pg = jnp.take_along_axis(table, prow[:, None], axis=1)[:, 0]
+    dest = jnp.where(active > 0, pg, n_pages)
+    row = length % page
+    if int8:
+        kq, ks = _paged_quant(k_new[:, 0])
+        vq, vs = _paged_quant(v_new[:, 0])
+        new_cache["ks"] = cache["ks"].at[dest, row].set(ks, mode="drop")
+        new_cache["vs"] = cache["vs"].at[dest, row].set(vs, mode="drop")
+        k_cast, v_cast = kq, vq
+        k_scale, v_scale = new_cache["ks"], new_cache["vs"]
+    else:
+        k_cast = k_new[:, 0].astype(kp.dtype)
+        v_cast = v_new[:, 0].astype(vp.dtype)
+        k_scale = v_scale = None
+    kp = new_cache["kp"] = kp.at[dest, row].set(k_cast, mode="drop")
+    vp = new_cache["vp"] = vp.at[dest, row].set(v_cast, mode="drop")
+    n_keys = jnp.where(active > 0, length + 1, 0)
+    attend = paged_flash_decode if cfg.attn_impl == "pallas" \
+        else paged_decode_ref
+    out3 = attend(q[:, 0], kp, vp, table, n_keys,
+                  k_scale=k_scale, v_scale=v_scale)
+    out = out3.reshape(B, 1, hq * dh)
+    out = out.astype(dtype) @ params["wo"].astype(dtype)
+    return out, new_cache
+
+
 def init_kv_cache(cfg, batch, max_len, *, ring=False, dtype=jnp.bfloat16):
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     shape = (batch, max_len, hkv, dh)
@@ -174,3 +284,24 @@ def init_kv_cache(cfg, batch, max_len, *, ring=False, dtype=jnp.bfloat16):
     if ring:
         return {"k": z, "v": z, "pos": jnp.array(0, jnp.int32)}
     return {"k": z, "v": z, "length": jnp.array(0, jnp.int32)}
+
+
+def init_paged_kv_cache(cfg, slots, num_pages, page_size, max_pages, *,
+                        int8=False, dtype=jnp.float32):
+    """One attention layer's paged pool cache (serving).  Pools are
+    shared across slots; the per-slot page table indexes into them
+    (unallocated entries stay 0 — always a valid pool index, masked out
+    by length/active).  ``int8`` stores codes + per-(row, head) f32
+    scales instead of raw K/V (see _paged_quant)."""
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    pool_dtype = jnp.int8 if int8 else dtype
+    z = jnp.zeros((num_pages, page_size, hkv, dh), pool_dtype)
+    c = {"kp": z, "vp": z,
+         "table": jnp.zeros((slots, max_pages), jnp.int32),
+         "length": jnp.zeros((slots,), jnp.int32),
+         "active": jnp.zeros((slots,), jnp.float32),
+         "new_valid": jnp.zeros((slots,), jnp.int32)}
+    if int8:
+        s = jnp.ones((num_pages, page_size, hkv), jnp.float32)
+        c["ks"], c["vs"] = s, s
+    return c

@@ -78,10 +78,16 @@ class Telemetry:
 
     def observe_rows(self, rows: Sequence[dict],
                      window_start_us: Optional[float] = None,
-                     window_dur_us: Optional[float] = None) -> None:
+                     window_dur_us: Optional[float] = None, *,
+                     measured: bool = False,
+                     phases: bool = True) -> None:
         """Drain boundary: one call per chunk (scan) or round (python).
         Emits metrics records, runs monitors, and — when tracing —
-        attributes the measured window across rounds and phases."""
+        attributes the measured window across rounds and phases.
+        ``measured=True`` marks the window as one real host measurement
+        per row (python driver, serving engine): each round gets a
+        measured ``round`` span; ``phases=False`` skips the attributed
+        phase split (see TraceRecorder.emit_rounds)."""
         rows = list(rows)
         if not rows:
             return
@@ -102,7 +108,8 @@ class Telemetry:
                 # round); synthesize a zero-cost marker window
                 window_start_us = self.tracer.now_us()
                 window_dur_us = float(len(rows))
-            self.tracer.emit_rounds(window_start_us, window_dur_us, rows)
+            self.tracer.emit_rounds(window_start_us, window_dur_us, rows,
+                                    measured=measured, phases=phases)
 
     # driver-measured spans pass straight through to the recorder
     def begin(self, name: str) -> None:

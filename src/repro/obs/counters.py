@@ -40,9 +40,11 @@ Counter-naming scheme (``<subsystem>/<signal>``):
   wire/…       MEASURED uplink/downlink bytes (mirrors cost_bytes_*)
   fault/…      injected-fault outcomes (mid-round losses)
 
+  serve/…      serving-engine signals (slot occupancy, admits/evicts,
+               pages in use, decode throughput) — per decode STEP
+
 The privacy accountant (ROADMAP item 2) will publish its per-round ε
-spend as ``privacy/epsilon`` through exactly this registry; serving
-metrics (item 3) get a ``serve/…`` subsystem.
+spend as ``privacy/epsilon`` through exactly this registry.
 """
 from __future__ import annotations
 
@@ -144,6 +146,24 @@ _r("wire/bytes_down", KIND_COUNTER,
 _r("fault/lost", KIND_COUNTER,
    "selected clients whose update was lost mid-round",
    engines=("sync",))
+# ---- serving (ROADMAP item 3; rows are per decode STEP, not round) ---
+_r("serve/admitted", KIND_COUNTER,
+   "requests admitted into decode slots this step", engines=("serve",),
+   unit="requests")
+_r("serve/evicted", KIND_COUNTER,
+   "requests evicted (EOS / length budget) this step",
+   engines=("serve",), unit="requests")
+_r("serve/tokens", KIND_COUNTER,
+   "tokens decoded this step", engines=("serve",), unit="tokens")
+_r("serve/slot_occupancy", KIND_GAUGE,
+   "decode slots holding a live request after this step",
+   engines=("serve",), unit="slots")
+_r("serve/pages_in_use", KIND_GAUGE,
+   "KV pages allocated out of the pool after this step",
+   engines=("serve",), unit="pages")
+_r("serve/tokens_per_s", KIND_GAUGE,
+   "measured decode throughput (host wall clock, filled at drain)",
+   engines=("serve",), unit="tok/s")
 
 
 def age_hist_len(fed_cfg) -> int:

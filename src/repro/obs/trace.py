@@ -7,8 +7,11 @@ tier is which:
 
   * **measured spans** — the ScanDriver (and the python-driver loops)
     wall-clock what the host can actually see: per-chunk ``stage`` /
-    ``compute`` / ``drain`` spans, and per-round totals under the
-    python driver.  These are real ``time.perf_counter`` measurements.
+    ``compute`` / ``drain`` spans, and — under the python driver and
+    the serving engine, which both sync once per round/step — a
+    measured per-round ``round`` span (``emit_rounds(measured=True)``;
+    no ``attributed`` flag, the boundaries are real ``perf_counter``
+    timestamps).
   * **attributed spans** — inside a chunk, each round's window is split
     into the engine's phase sequence (selection → client_update →
     delivery → sanitize → aggregate → writeback) by the static weight
@@ -57,6 +60,16 @@ def phase_weights(engine: str) -> Dict[str, float]:
     w = {p[0]: p[col] for p in PHASES}
     total = sum(w.values())
     return {k: v / total for k, v in w.items()}
+
+
+def counter_tracks() -> Tuple[str, ...]:
+    """The registered scalar gauges exported as Perfetto counter ("C")
+    tracks: the async buffer occupancy plus every serve/* gauge."""
+    from repro.obs import counters as obs_counters
+    return tuple(
+        n for n, s in obs_counters.REGISTRY.items()
+        if s.kind == obs_counters.KIND_GAUGE and s.shape == ()
+        and (n == "buffer/occupancy" or n.startswith("serve/")))
 
 
 @contextlib.contextmanager
@@ -108,21 +121,43 @@ class TraceRecorder:
             "args": args,
         })
 
-    # -- attributed per-round phase spans -----------------------------
+    # -- per-round spans (measured and/or attributed) -----------------
     def emit_rounds(self, window_start_us: float, window_dur_us: float,
-                    rows: Sequence[dict]) -> None:
+                    rows: Sequence[dict], *, measured: bool = False,
+                    phases: bool = True) -> None:
         """Split a measured window (one chunk, or one python-driver
         round) across its rounds and each round across the engine's
         phases.  ``rows`` are the drained history rows; each phase span
-        carries the round's real ``obs/`` counters in ``args``."""
+        carries the round's real ``obs/`` counters in ``args``.
+
+        measured=True: the window IS one real host measurement per row
+        (python driver, serving engine), so each round additionally
+        gets a measured ``round`` span — real timestamps, no
+        ``attributed`` flag.  phases=False drops the attributed phase
+        split entirely (the serving engine has no FL phase sequence).
+        Scalar gauges from :func:`counter_tracks` are always exported
+        as Perfetto counter ("C") events at each round's start."""
         if not rows:
             return
+        tracks = counter_tracks()
         per_round = window_dur_us / len(rows)
         for j, row in enumerate(rows):
             r0 = window_start_us + j * per_round
             rnd = row.get("round", row.get("step", j))
             obs = {k: _num(v) for k, v in row.items()
                    if isinstance(k, str) and k.startswith("obs/")}
+            if measured:
+                self.span("round", r0, per_round, tid=self.ROUND_TID,
+                          round=_num(rnd), **obs)
+            for name in tracks:
+                v = obs.get("obs/" + name)
+                if isinstance(v, (int, float)):
+                    self.events.append({
+                        "name": name, "ph": "C", "pid": 0,
+                        "tid": self.ROUND_TID, "ts": r0,
+                        "args": {"value": v}})
+            if not phases:
+                continue
             off = 0.0
             for name in PHASE_NAMES:
                 dur = per_round * self._weights[name]

@@ -1,0 +1,16 @@
+"""Serving subsystem (ROADMAP item 3): continuous batching over a paged
+KV cache with a Pallas flash-decode kernel and optional int8 KV.
+
+  scheduler.py  slot protocol, page allocation, ServeConfig/SlotState,
+                the HostLedger admission mirror
+  engine.py     jitted admit/decode programs + the host serving loop
+
+Kernels live in repro.kernels.paged_decode{,_ref}; the attention-layer
+cache plumbing is models/attention.py's paged branch.
+"""
+from repro.serve.engine import ServeEngine, init_paged_cache, kv_bytes_read
+from repro.serve.scheduler import (HostLedger, Request, ServeConfig,
+                                   SlotState)
+
+__all__ = ["ServeEngine", "ServeConfig", "SlotState", "Request",
+           "HostLedger", "init_paged_cache", "kv_bytes_read"]
